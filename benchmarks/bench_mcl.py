@@ -1,0 +1,54 @@
+"""Paper Fig. 3 — HipMCL iterations with batched SpGEMM.
+
+Runs the first MCL iterations on a protein-similarity-like block matrix with
+a tight memory budget (forces b > 1) and an unconstrained budget (b = 1),
+reporting per-iteration time and the batch counts — the end-to-end
+application integration the paper demonstrates on Isolates-small.
+"""
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import gen
+from repro.core.grid import make_grid
+from repro.sparse_apps.mcl import MCLConfig, _col_normalize_np, mcl_iterate
+from repro.core.sparse import from_numpy_coo
+
+from .common import emit
+
+
+def run(n: int = 64) -> None:
+    if len(jax.devices()) < 8:
+        emit("fig3/skipped", 0, "needs 8 host devices")
+        return
+    grid = make_grid(2, 2, 2)
+    a = gen.protein_similarity_like(n, blocks=4, intra_p=0.5, seed=11)
+    nnz = int(a.nnz)
+    rows = np.asarray(a.rows[:nnz])
+    cols = np.asarray(a.cols[:nnz])
+    vals = _col_normalize_np(rows, cols,
+                             np.asarray(a.vals[:nnz]).astype(np.float64), n)
+    a = from_numpy_coo(rows, cols, vals.astype(np.float32), (n, n), cap=nnz)
+
+    # probe the symbolic plan to pick a budget that actually forces b > 1
+    from repro.core.batched import plan_batches
+    from repro.core.distsparse import scatter_to_grid
+
+    probe = plan_batches(
+        scatter_to_grid(a, grid, "A"), scatter_to_grid(a, grid, "B"), grid,
+        per_process_memory=1 << 30,
+    )
+    r = 12
+    tight = r * max(probe.max_unmerged_nnz // 3, 1) + (1 << 14)
+    for label, mem in (("batched", tight), ("unconstrained", 1 << 30)):
+        t0 = time.perf_counter()
+        final, hist = mcl_iterate(
+            a, grid,
+            MCLConfig(max_iters=4, per_process_memory=mem),
+        )
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(f"fig3/mcl_{label}", dt,
+             f"iters={len(hist)} b_first={hist[0]['batches']} "
+             f"nnz_final={hist[-1]['nnz']}")

@@ -1,0 +1,35 @@
+"""§Roofline summary — reads dryrun_results.json and emits the three terms
+per (arch × shape × mesh) as benchmark rows (derived = dominant term +
+useful-flops fraction). Run the dry-run sweep first:
+    python -m repro.launch.dryrun --all --mesh both
+"""
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+
+
+def run() -> None:
+    if not os.path.exists(RESULTS):
+        emit("roofline/skipped", 0, f"no {RESULTS}; run the dry-run sweep")
+        return
+    with open(RESULTS) as f:
+        rows = json.load(f)
+    for r in sorted(rows, key=lambda x: (x["arch"], x.get("shape", ""), x["mesh"])):
+        name = f"roofline/{r['arch']}/{r.get('shape','')}/{r['mesh']}"
+        if r.get("kind") == "skip":
+            emit(name, 0, "SKIP " + r.get("skip_reason", "")[:60])
+            continue
+        if r.get("kind") == "error":
+            emit(name, 0, "ERROR")
+            continue
+        roof = r["roofline"]
+        emit(
+            name,
+            roof["bound_s"] * 1e6,
+            f"dom={roof['dominant']} c={roof['compute_s']:.4f} "
+            f"m={roof['memory_s']:.4f} n={roof['collective_s']:.4f} "
+            f"useful={r.get('useful_flops_fraction', 0):.3f}",
+        )

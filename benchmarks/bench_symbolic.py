@@ -1,0 +1,37 @@
+"""Paper Fig. 8 — symbolic step cost vs numeric multiply.
+
+Times the distributed symbolic pass (count vectors only) against the numeric
+multiply on the same inputs; the paper's claim is that the symbolic step is
+communication-dominated and benefits even more from CA layering because its
+local compute is trivial.
+"""
+import jax
+
+from repro.core import gen
+from repro.core.batched import plan_batches, symbolic3d
+from repro.core.distsparse import scatter_to_grid
+from repro.core.grid import make_grid
+from repro.core.summa3d import BatchCaps, summa3d_sparse_step
+
+from .common import emit, time_jit
+
+
+def run(n: int = 64, nnz_per_row: int = 6) -> None:
+    if len(jax.devices()) < 8:
+        emit("fig8/skipped", 0, "needs 8 host devices")
+        return
+    grid = make_grid(2, 2, 2)
+    a = gen.erdos_renyi(n, nnz_per_row, seed=7)
+    b = gen.erdos_renyi(n, nnz_per_row, seed=8)
+    A = scatter_to_grid(a, grid, "A")
+    B = scatter_to_grid(b, grid, "B")
+
+    t_sym = time_jit(lambda: symbolic3d(A, B, grid), iters=3, warmup=1)
+    emit("fig8/symbolic_step", t_sym, "count-vector payloads")
+
+    caps = BatchCaps(flops_cap=8192, d_cap=4096, piece_cap=2048, c_cap=2048)
+    fn = jax.jit(summa3d_sparse_step, static_argnames=("grid", "caps", "semiring"))
+    t_num = time_jit(lambda: fn(A, B, grid=grid, caps=caps)[0].vals, iters=3,
+                     warmup=1)
+    emit("fig8/numeric_multiply", t_num,
+         f"symbolic/numeric={t_sym / max(t_num, 1):.3f}")

@@ -1,0 +1,27 @@
+"""Shared benchmark utilities: timing, CSV emission, host grids."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_jit(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time (µs) of a jitted callable (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))

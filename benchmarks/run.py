@@ -1,0 +1,37 @@
+import os
+
+# The paper's figures measure COLLECTIVES (broadcast/fiber-a2a volumes), so
+# this entrypoint provisions 8 host devices for itself — deliberately scoped
+# here, not in conftest/pyproject (tests must keep seeing 1 device).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+import sys
+
+
+def main() -> None:
+    from . import (
+        bench_comm_model,
+        bench_layers_batches,
+        bench_local_kernels,
+        bench_mcl,
+        bench_roofline,
+        bench_scaling,
+        bench_symbolic,
+    )
+
+    print("name,us_per_call,derived")
+    bench_local_kernels.run()   # Table VII / Fig. 15
+    bench_comm_model.run()      # Table II
+    bench_layers_batches.run()  # Fig. 4/5 (+ Table VI trends)
+    bench_symbolic.run()        # Fig. 8
+    bench_scaling.run()         # Fig. 6/7/9 (alpha-beta projection)
+    bench_mcl.run()             # Fig. 3 (HipMCL end-to-end)
+    bench_roofline.run()        # EXPERIMENTS.md section Roofline feed
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""The paper's technique inside the LM stack: MoE dispatch as SpGEMM.
+
+Shows the token→expert dispatch matrix built as a core SparseCOO and pushed
+through the SpMM kernel (the same gather/segment machinery the distributed
+SpGEMM uses), compares against the direct scatter, and prints the routing
+histogram — DESIGN.md §4's integration story, runnable.
+
+Run:  PYTHONPATH=src python examples/moe_spgemm_dispatch.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+
+def main() -> None:
+    import dataclasses
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import AxisType
+
+    from repro.configs import get_config
+    from repro.models import transformer as tfm
+    from repro.models.moe import (
+        MoEConfig,
+        _capacity,
+        _dispatch,
+        _dispatch_indices,
+        _route,
+    )
+
+    cfg = get_config("deepseek-moe-16b", smoke=True)
+    mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+
+    # --- the dispatch matrix, explicitly
+    mcfg = cfg.moe
+    T, D = 32, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(0), (T, D))
+    wg = jax.random.normal(jax.random.PRNGKey(1), (D, mcfg.n_experts)) * 0.1
+    top_p, top_e, aux = _route(x, wg, mcfg)
+    cap = _capacity(T, mcfg)
+    eid, slot, keep = _dispatch_indices(top_e, mcfg, cap)
+    print(f"{T} tokens -> {mcfg.n_experts} experts (top-{mcfg.top_k}), "
+          f"capacity {cap}/expert")
+    hist = np.bincount(np.asarray(eid), minlength=mcfg.n_experts)
+    print(f"routing histogram: {hist.tolist()}")
+    print(f"aux (load-balance) loss: {float(aux):.4f}")
+
+    buf_spgemm = _dispatch(x, eid, slot, keep, mcfg, cap)
+    mcfg_scatter = dataclasses.replace(mcfg, dispatch_mode="scatter")
+    buf_scatter = _dispatch(x, eid, slot, keep, mcfg_scatter, cap)
+    np.testing.assert_allclose(np.asarray(buf_spgemm), np.asarray(buf_scatter),
+                               rtol=1e-5, atol=1e-5)
+    print("SpGEMM dispatch == direct scatter ✓ "
+          f"(buffers {buf_spgemm.shape}, dispatch matrix {mcfg.n_experts * cap}×{T})")
+
+    # --- full model forward with EP over the "model" axis
+    params = tfm.init_params(cfg, jax.random.PRNGKey(2))
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (4, 16), 0, cfg.vocab)
+    with jax.set_mesh(mesh):
+        logits, aux = tfm.forward(cfg, params, tokens, mesh)
+    print(f"full MoE model forward on 2×2 mesh: logits {logits.shape}, "
+          f"aux={float(aux):.4f} — OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""BELLA-style sequence overlap via AA^T (paper §V-G, Fig. 10/11).
+
+A (sequences × k-mers) indicator matrix is multiplied by its transpose in
+batches; pairs sharing >= min_shared k-mers are candidate overlaps, emitted
+per batch and discarded — the memory-constrained pattern the paper built for.
+
+Run:  PYTHONPATH=src python examples/overlap_detection.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def main() -> None:
+    import numpy as np
+
+    from repro.core import gen
+    from repro.core.grid import make_grid
+    from repro.sparse_apps.graph_algorithms import (
+        overlap_pairs,
+        overlap_pairs_reference,
+    )
+
+    grid = make_grid(2, 2, 2)
+    nseqs, nkmers = 64, 128
+    a = gen.kmer_like(nseqs, nkmers, kmers_per_seq=6, seed=23)
+    print(f"{nseqs} sequences × {nkmers} k-mers, nnz={int(a.nnz)}")
+
+    pairs = overlap_pairs(a, grid, min_shared=2)
+    ref = overlap_pairs_reference(a, min_shared=2)
+    assert pairs == ref, "batched AA^T disagrees with the dense reference"
+    print(f"candidate overlap pairs (>=2 shared k-mers): {len(pairs)}")
+    for i, j, s in pairs[:8]:
+        print(f"  seq{i:3d} ~ seq{j:3d}  shared={s}")
+    print("OK — matches dense reference")
+
+
+if __name__ == "__main__":
+    main()

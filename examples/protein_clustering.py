@@ -1,0 +1,68 @@
+"""HipMCL-style protein clustering (paper §V-C, Fig. 3) — end-to-end.
+
+Builds a synthetic protein-similarity network with planted families, runs
+Markov clustering where every expansion A·A goes through BatchedSUMMA3D
+under a tight memory budget (each batch pruned immediately), and reports the
+recovered families.
+
+Run:  PYTHONPATH=src python examples/protein_clustering.py [--n 96 --families 6]
+"""
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--families", type=int, default=4)
+    ap.add_argument("--memory", type=int, default=1 << 22,
+                    help="per-process bytes (tight -> batching kicks in)")
+    args = ap.parse_args()
+
+    from repro.core import gen
+    from repro.core.grid import make_grid
+    from repro.core.sparse import from_numpy_coo
+    from repro.sparse_apps.mcl import (
+        MCLConfig,
+        _col_normalize_np,
+        clusters_from_matrix,
+        mcl_iterate,
+    )
+
+    grid = make_grid(2, 2, 2)
+    a = gen.protein_similarity_like(args.n, blocks=args.families, intra_p=0.6,
+                                    seed=7)
+    nnz = int(a.nnz)
+    rows = np.asarray(a.rows[:nnz])
+    cols = np.asarray(a.cols[:nnz])
+    vals = _col_normalize_np(
+        rows, cols, np.asarray(a.vals[:nnz]).astype(np.float64), args.n
+    )
+    a = from_numpy_coo(rows, cols, vals.astype(np.float32), (args.n, args.n),
+                       cap=nnz)
+    print(f"input: {args.n} proteins, {nnz} similarities, "
+          f"{args.families} planted families")
+
+    final, hist = mcl_iterate(
+        a, grid,
+        MCLConfig(max_iters=15, per_process_memory=args.memory),
+        verbose=True,
+    )
+    nnz = int(final.nnz)
+    labels = clusters_from_matrix(
+        np.asarray(final.rows[:nnz]), np.asarray(final.cols[:nnz]), args.n
+    )
+    found = len(set(labels.tolist()))
+    print(f"converged in {len(hist)} iterations; clusters found: {found} "
+          f"(planted: {args.families})")
+    sizes = sorted(np.bincount(np.unique(labels, return_inverse=True)[1]).tolist(),
+                   reverse=True)
+    print(f"cluster sizes: {sizes[:10]}")
+
+
+if __name__ == "__main__":
+    main()

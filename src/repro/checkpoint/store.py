@@ -1,0 +1,150 @@
+"""Sharded checkpointing with elastic restore.
+
+Layout:  <dir>/step_<N>/
+           manifest.msgpack   — step, tree structure, shapes, dtypes, hashes
+           arrays.npz         — one entry per leaf (host-gathered)
+
+Design points for 1000+-node deployments (scaled-down here, same contract):
+  * each leaf records a content hash — restore verifies integrity and
+    refuses silently-truncated files (a real failure mode at scale);
+  * restore is **elastic**: arrays are re-device_put with the *target* mesh's
+    shardings, so a 512-chip checkpoint restores onto 256 chips (or a
+    different DP/TP split) without conversion tooling;
+  * writes go to a temp dir + atomic rename, so a node failure mid-write
+    never corrupts the latest-complete checkpoint;
+  * `async_save` runs the host-gather + write on a worker thread, overlapping
+    the next training steps (checkpoint stalls are a top straggler source).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+try:
+    import msgpack
+except ImportError:  # pragma: no cover
+    msgpack = None
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(p): leaf for p, leaf in flat}, treedef
+
+
+def save(path: str, step: int, state: Dict[str, Any]) -> str:
+    """Synchronous checkpoint write. Returns the final directory."""
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat, _ = _flatten(state)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    manifest = {
+        "step": step,
+        "leaves": {
+            k: {
+                "shape": list(a.shape),
+                "dtype": str(a.dtype),
+                "hash": hashlib.sha256(a.tobytes()).hexdigest()[:16],
+            }
+            for k, a in arrays.items()
+        },
+    }
+    np.savez(os.path.join(tmp, "arrays.npz"), **{
+        k.replace("/", "\x00"): a for k, a in arrays.items()
+    })
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(path)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    path: str, step: int, like: Dict[str, Any], shardings=None
+) -> Dict[str, Any]:
+    """Restore into the structure of `like`, resharding onto `shardings`
+    (elastic: the saved mesh layout is irrelevant — only shapes must match)."""
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        arrays = {k.replace("\x00", "/"): z[k] for k in z.files}
+    for k, meta in manifest["leaves"].items():
+        a = arrays[k]
+        h = hashlib.sha256(a.tobytes()).hexdigest()[:16]
+        if h != meta["hash"]:
+            raise IOError(f"checkpoint corruption: {k} hash mismatch")
+    flat_like, treedef = _flatten(like)
+    if set(flat_like) != set(arrays):
+        missing = set(flat_like) ^ set(arrays)
+        raise KeyError(f"checkpoint tree mismatch: {sorted(missing)[:5]} ...")
+    sh_flat = None
+    if shardings is not None:
+        sh_flat, _ = _flatten(shardings)
+    out = {}
+    for k, template in flat_like.items():
+        a = arrays[k]
+        assert tuple(a.shape) == tuple(template.shape), (k, a.shape, template.shape)
+        if sh_flat is not None and k in sh_flat:
+            out[k] = jax.device_put(a, sh_flat[k])
+        else:
+            out[k] = jax.device_put(a)
+    leaves = [out[jax.tree_util.keystr(p)] for p, _ in
+              jax.tree_util.tree_flatten_with_path(like)[0]]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class AsyncCheckpointer:
+    """Threaded save: snapshot to host, write off-thread, never block > one
+    outstanding checkpoint (back-pressure instead of unbounded queue)."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def save(self, step: int, state) -> None:
+        self.wait()  # back-pressure: at most one in flight
+        host_state = jax.tree.map(np.asarray, state)  # snapshot now
+
+        def work():
+            save(self.path, step, host_state)
+            self.last_saved = step
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.path)
+            if d.startswith("step_") and not d.endswith(".tmp")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"))

@@ -1,0 +1,2 @@
+"""Architecture configs (--arch <id>) + input shapes + SpGEMM workloads."""
+from .registry import ARCHS, SHAPES, WORKLOADS, applicable, get_config, input_specs  # noqa: F401

@@ -1,0 +1,70 @@
+"""--arch <id> registry: full configs, smoke configs, shapes, input specs."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import ModelConfig
+from . import (
+    deepseek_moe_16b,
+    gemma2_9b,
+    granite_20b,
+    mamba2_370m,
+    minitron_8b,
+    musicgen_large,
+    olmoe_1b_7b,
+    pixtral_12b,
+    starcoder2_7b,
+    zamba2_2_7b,
+)
+from .shapes import SHAPES, ShapeSpec, applicable  # noqa: F401
+from .spgemm_workloads import WORKLOADS  # noqa: F401
+
+_MODULES = {
+    "pixtral-12b": pixtral_12b,
+    "deepseek-moe-16b": deepseek_moe_16b,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "gemma2-9b": gemma2_9b,
+    "granite-20b": granite_20b,
+    "starcoder2-7b": starcoder2_7b,
+    "minitron-8b": minitron_8b,
+    "musicgen-large": musicgen_large,
+    "mamba2-370m": mamba2_370m,
+    "zamba2-2.7b": zamba2_2_7b,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = _MODULES[arch]
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeSpec
+) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell —
+    no allocation; the dry-run lowers against these. Modality frontends are
+    stubs: `embeds` replaces token ids for [vlm]/[audio] archs."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.input_mode == "tokens":
+            return {
+                "inputs": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        return {
+            "inputs": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+            "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        if cfg.input_mode == "tokens":
+            return {"inputs": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        return {"inputs": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)}
+    # decode: one token per sequence, KV cache of size S
+    if cfg.input_mode == "tokens":
+        return {"inputs": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    return {"inputs": jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)}

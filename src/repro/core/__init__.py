@@ -1,0 +1,16 @@
+"""Core library: the paper's contribution — communication-avoiding,
+memory-constrained SpGEMM (BatchedSUMMA3D) — as composable JAX modules.
+
+Layering (bottom-up):
+  semiring      algebra the multiply runs over (paper §II-A)
+  sparse        fixed-capacity padded COO + structural ops
+  local_spgemm  per-process multiply/merge kernels (paper §IV-D, TPU-adapted)
+  symbolic      batch-count math (paper Alg. 3 line 12 + Eq. 2)
+  gen           synthetic workload generators (paper Table V regimes)
+  summa2d       2D sparse SUMMA on a (rows × cols) mesh (paper Alg. 1)
+  summa3d       3D sparse SUMMA: layers + fiber all-to-all/merge (paper Alg. 2)
+  batched       BatchedSUMMA3D + distributed symbolic step (paper Alg. 3/4)
+"""
+from . import gen, local_spgemm, semiring, sparse, symbolic  # noqa: F401
+from .sparse import SparseCOO, coalesce, empty, from_dense, from_numpy_coo  # noqa: F401
+from .semiring import PLUS_TIMES, OR_AND, MIN_PLUS, MAX_TIMES, PLUS_PAIR  # noqa: F401

@@ -1,0 +1,351 @@
+"""BatchedSUMMA3D (paper Alg. 4) + the distributed symbolic step (Alg. 3).
+
+The driver mirrors the paper's phase structure exactly:
+
+  1. SYMBOLIC3D: one communication-avoiding pass that computes per-process
+     flops upper bounds. Instead of broadcasting tiles, it reduces A's
+     per-column counts along grid rows (psum) and gathers them along grid
+     columns — the paper's observation that the symbolic step has the same
+     communicator structure but a far lighter payload (§IV-A, Fig. 8).
+  2. Host-side batch planning: b from Alg. 3 line 12 (+ Eq. 2 lower-bound
+     check), rounded up for block-cyclic divisibility; static capacities for
+     the numeric pass derived from the symbolic per-column vectors. This is
+     the paper's symbolic→numeric split — in JAX it also fixes the static
+     shapes the compiler needs.
+  3. Per-batch SUMMA3D (Alg. 4 line 5-6) with block-cyclic column selection
+     (Fig. 1(i)) inside the jitted step — one compile serves all batches
+     (batch index is a traced scalar).
+  4. The consumer callback sees each C batch and may prune/store/discard it
+     (HipMCL-style usage, §V-C) — C is never materialized whole unless asked.
+
+Overflow robustness: if a static capacity is exceeded (sparsity estimate
+beaten by correlation structure), the step reports it and the driver retries
+that batch with 2× capacity — bounded, logged, and tested.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import semiring as sr
+from .distsparse import DistSparse
+from .grid import COL_AX, LAYER_AX, ROW_AX, Grid
+from .summa3d import BatchCaps, _squeeze_tile, summa3d_dense_step, summa3d_sparse_step
+from .symbolic import batch_count, batch_count_lower_bound, batching_plan_columns
+
+# cached compiles: one per (grid, caps, semiring, tile-shape) combination —
+# the batch index is a traced scalar so all batches share one executable.
+_dense_jit = jax.jit(summa3d_dense_step, static_argnames=("grid", "semiring"))
+_sparse_jit = jax.jit(
+    summa3d_sparse_step, static_argnames=("grid", "caps", "semiring")
+)
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Distributed symbolic step (Alg. 3)
+# ---------------------------------------------------------------------------
+def symbolic3d(a: DistSparse, b: DistSparse, grid: Grid) -> np.ndarray:
+    """Per-(process, local column of B) flops upper bound.
+
+    Returns host array of shape (pr, pc, l, tn_b):
+      flops[i,j,k,c] = Σ_{t ∈ B(:, block j, layer k), col(t)=c}
+                           nnz(A^(k)(row-block i, k_idx(t)))
+
+    which is exactly the number of partial products process (i,j,k) forms for
+    output column c in the numeric step (A gathered over the grid row, B over
+    the grid column group). Only count *vectors* travel — the paper's point
+    that the symbolic step shares the numeric communicators but moves a far
+    lighter payload (§IV-A, Fig. 8).
+    """
+    _, tn_b = b.tile_shape
+    _, wl_a = a.tile_shape
+
+    def step(a_t: DistSparse, b_t: DistSparse):
+        a_loc = _squeeze_tile(a_t)
+        b_loc = _squeeze_tile(b_t)
+        # A col counts restricted to OUR row block, over the per-layer
+        # contraction range, ordered by stage (matches _gather_A indexing)
+        cc_local = a_loc.col_counts()  # (wl_a,)
+        cc_full = lax.all_gather(cc_local, COL_AX).reshape(-1)  # (k_tot,)
+        # every row block's count vector (needed because our B entries
+        # contribute to every process in our grid column's row group)
+        cc_all = lax.all_gather(cc_full, ROW_AX)  # (pr, k_tot)
+        k_tot = cc_full.shape[0]
+        cc_all_pad = jnp.concatenate(
+            [cc_all, jnp.zeros((cc_all.shape[0], 1), jnp.int32)], axis=1
+        )
+        # B entries in OUR tile: contraction index = i_own*wl + local row
+        # (matches _gather_B indexing)
+        i_own = lax.axis_index(ROW_AX)
+        valid = b_loc.valid_mask()
+        k_idx = jnp.where(valid, b_loc.rows + i_own * wl_a, k_tot)
+        contrib = cc_all_pad[:, k_idx]  # (pr, capB): per target row block
+        contrib = jnp.where(valid[None, :], contrib, 0)
+        segids = jnp.where(valid, b_loc.cols, tn_b)
+        percol_all = jax.ops.segment_sum(
+            contrib.T, segids, num_segments=tn_b + 1
+        )[:tn_b].T  # (pr, tn_b): row i = our entries' contribution to block-row i
+        # sum over the row group -> each process reads its own row
+        percol_all = lax.psum(percol_all, ROW_AX)
+        percol = percol_all[i_own]
+        return percol[None, None, None]
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    in_specs = (
+        DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
+                   shape=a.shape, tile_shape=a.tile_shape,
+                   grid_shape=a.grid_shape, kind=a.kind),
+        DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
+                   shape=b.shape, tile_shape=b.tile_shape,
+                   grid_shape=b.grid_shape, kind=b.kind),
+    )
+    fn = jax.jit(jax.shard_map(
+        step, mesh=grid.mesh, in_specs=in_specs, out_specs=spec3,
+        check_vma=False,
+    ))
+    return np.asarray(fn(a, b))  # (pr, pc, l, tn_b)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """Host-side plan produced by the symbolic step."""
+
+    num_batches: int
+    lower_bound: int  # Eq. (2)
+    caps: BatchCaps
+    total_flops: int  # Σ multiply ops (global)
+    max_unmerged_nnz: int  # max over processes, b=1
+    per_batch_flops: np.ndarray  # (num_batches,) global flops per batch
+
+
+def plan_batches(
+    a: DistSparse,
+    b: DistSparse,
+    grid: Grid,
+    per_process_memory: int,
+    r_bytes: int = 12,
+    slack: float = 1.3,
+    force_num_batches: Optional[int] = None,
+) -> BatchPlan:
+    """Run the symbolic step and derive b + static capacities (host math)."""
+    percol = symbolic3d(a, b, grid)  # (pr, pc, l, tn_b)
+    pr, pc, l, tn_b = percol.shape
+    per_process_flops = percol.sum(axis=-1)  # (pr, pc, l)
+    max_unmerged = int(per_process_flops.max())
+    total_flops = int(per_process_flops.sum())
+    max_nnz_a = int(np.asarray(a.nnz).max())
+    max_nnz_b = int(np.asarray(b.nnz).max())
+
+    if force_num_batches is not None:
+        nb = force_num_batches
+    else:
+        nb = batch_count(
+            max_unmerged, max_nnz_a, max_nnz_b, per_process_memory, r=r_bytes
+        )
+    nb = batching_plan_columns(tn_b, nb, l)
+    wbl = tn_b // (nb * l)  # block width of the block-cyclic split
+
+    # per-(process, batch, piece) flops: fold local columns into
+    # (block, within) and map block -> (piece k2 = block // nb, batch = block % nb)
+    blocks = percol.reshape(pr, pc, l, nb * l, wbl).sum(axis=-1)  # (pr,pc,l,nb*l)
+    piece_of_block = np.arange(nb * l) // nb
+    batch_of_block = np.arange(nb * l) % nb
+    flops_pbp = np.zeros((pr, pc, l, nb, l), np.int64)  # [..., batch, piece]
+    for blk in range(nb * l):
+        flops_pbp[:, :, :, batch_of_block[blk], piece_of_block[blk]] += blocks[
+            :, :, :, blk
+        ]
+    per_batch_proc = flops_pbp.sum(axis=-1)  # (pr,pc,l,nb)
+    max_batch_flops = int(per_batch_proc.max())
+    max_piece_flops = int(flops_pbp.max())
+    # merged C piece bound: sum over source layers of that piece's flops
+    merged_piece = flops_pbp.sum(axis=2).max()  # max over (pr,pc,batch,piece)
+
+    tm_a = a.tile_shape[0]
+    wb = tn_b // nb
+    flops_cap = _rup8(max(int(max_batch_flops * slack), 64))
+    d_cap = _rup8(min(flops_cap, tm_a * wb))
+    piece_cap = _rup8(min(max(int(max_piece_flops * slack), 64), tm_a * (wb // l)))
+    c_cap = _rup8(min(max(int(merged_piece * slack), 64), tm_a * (wb // l)))
+    caps = BatchCaps(flops_cap=flops_cap, d_cap=d_cap, piece_cap=piece_cap, c_cap=c_cap)
+
+    # Eq. (2) lower bound (global memory form) for reporting/validation
+    nnz_a = int(np.asarray(a.nnz).sum())
+    nnz_b = int(np.asarray(b.nnz).sum())
+    mem_c = r_bytes * int(per_process_flops.sum())
+    try:
+        lb = batch_count_lower_bound(
+            mem_c, per_process_memory * grid.p, nnz_a, nnz_b, r=r_bytes
+        )
+    except MemoryError:
+        lb = -1
+
+    per_batch_flops = per_batch_proc.sum(axis=(0, 1, 2))  # (nb,)
+    return BatchPlan(
+        num_batches=nb,
+        lower_bound=lb,
+        caps=caps,
+        total_flops=total_flops,
+        max_unmerged_nnz=max_unmerged,
+        per_batch_flops=per_batch_flops,
+    )
+
+
+def _rup8(x: int) -> int:
+    return ((x + 7) // 8) * 8
+
+
+def batch_column_map(n: int, grid: Grid, num_batches: int, batch: int) -> np.ndarray:
+    """Global columns covered by ``batch``, in C-tile order.
+
+    Returns g[j, k, c] of shape (pc, l, wb/l): the global column of local
+    column c in C tile (:, j, k) for this batch. Inverse of the block-cyclic
+    selection + fiber split.
+    """
+    pc, l = grid.pc, grid.l
+    w = n // pc
+    wb = w // num_batches
+    wbl = w // (num_batches * l)
+    out = np.zeros((pc, l, wb // l), np.int64)
+    for j in range(pc):
+        for k in range(l):
+            for c in range(wb // l):
+                # C tile layer k holds fiber piece k = D cols [k*wb/l,(k+1)*wb/l)
+                d_col = k * (wb // l) + c
+                # D batch cols remap: block t = d_col // wbl (t-th block of the
+                # batch), within = d_col % wbl; original local block index =
+                # t * num_batches + batch
+                t = d_col // wbl
+                within = d_col % wbl
+                orig_local = (t * num_batches + batch) * wbl + within
+                out[j, k, c] = j * w + orig_local
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The batched driver (Alg. 4)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class BatchedResult:
+    plan: BatchPlan
+    num_retries: int
+    consumed: list  # consumer outputs per batch
+
+
+def batched_summa3d(
+    a: DistSparse,
+    b: DistSparse,
+    grid: Grid,
+    per_process_memory: int,
+    consumer: Callable[[int, object, np.ndarray], object],
+    path: str = "sparse",
+    semiring: sr.Semiring = sr.PLUS_TIMES,
+    r_bytes: int = 12,
+    slack: float = 1.3,
+    max_retries: int = 4,
+    force_num_batches: Optional[int] = None,
+) -> BatchedResult:
+    """Multiply A·B in batches; the consumer sees each batch then it's freed.
+
+    consumer(batch_idx, c_batch, global_col_map) -> anything; c_batch is a
+    DistSparse (path="sparse") or stacked dense tiles (path="dense").
+    """
+    plan = plan_batches(
+        a, b, grid, per_process_memory, r_bytes=r_bytes, slack=slack,
+        force_num_batches=force_num_batches,
+    )
+    nb = plan.num_batches
+    l = grid.l
+    tn_b = b.tile_shape[1]
+    wb = tn_b // nb
+    # batch selection capacity: worst-case per-batch share of B entries
+    nnz_host = np.asarray(b.nnz)
+    sel_cap = _rup8(max(int(nnz_host.max() * slack / max(nb // 2, 1)), 64))
+    sel_cap = min(sel_cap, b.cap)
+
+    consumed = []
+    retries = 0
+    caps = plan.caps
+    for bi in range(nb):
+        ok = False
+        cur_caps, cur_sel_cap = caps, sel_cap
+        for attempt in range(max_retries + 1):
+            b_sel, ovf_sel = _select_batch_jit(b, grid, bi, nb, l, cur_sel_cap, wb)
+            if int(ovf_sel) > 0:
+                cur_sel_cap = min(_rup8(cur_sel_cap * 2), b.cap)
+                retries += 1
+                continue
+            if path == "dense":
+                c_batch = _dense_jit(a, b_sel, grid=grid, semiring=semiring)
+                ok = True
+                break
+            c_batch, ovf = _sparse_jit(
+                a, b_sel, grid=grid, caps=cur_caps, semiring=semiring
+            )
+            if int(ovf) == 0:
+                ok = True
+                break
+            retries += 1
+            cur_caps = BatchCaps(
+                flops_cap=cur_caps.flops_cap * 2,
+                d_cap=cur_caps.d_cap * 2,
+                piece_cap=cur_caps.piece_cap * 2,
+                c_cap=cur_caps.c_cap * 2,
+            )
+        if not ok:
+            raise RuntimeError(
+                f"batch {bi}: capacity overflow persisted after {max_retries} retries"
+            )
+        col_map = batch_column_map(b.shape[1], grid, nb, bi)
+        consumed.append(consumer(bi, c_batch, col_map))
+    return BatchedResult(plan=plan, num_retries=retries, consumed=consumed)
+
+
+@partial(jax.jit, static_argnames=("grid", "num_batches", "l", "cap", "wb"))
+def _select_batch_jit(b: DistSparse, grid: Grid, batch, num_batches: int, l: int,
+                      cap: int, wb: int):
+    def step(b_t: DistSparse, batch_):
+        b_loc = _squeeze_tile(b_t)
+        sel, ovf = b_loc.select_cols_blockcyclic(
+            batch_, num_batches, l, new_cap=cap
+        )
+        ovf = lax.pmax(lax.pmax(lax.pmax(ovf, ROW_AX), COL_AX), LAYER_AX)
+        return (
+            sel.rows[None, None, None],
+            sel.cols[None, None, None],
+            sel.vals[None, None, None],
+            sel.nnz[None, None, None],
+            ovf,
+        )
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    spec0 = jax.sharding.PartitionSpec()
+    in_specs = (
+        DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
+                   shape=b.shape, tile_shape=b.tile_shape,
+                   grid_shape=b.grid_shape, kind=b.kind),
+        spec0,
+    )
+    fn = jax.shard_map(
+        step, mesh=grid.mesh, in_specs=in_specs,
+        out_specs=(spec3, spec3, spec3, spec3, spec0),
+        check_vma=False,
+    )
+    rows, cols, vals, nnz, ovf = fn(b, jnp.int32(batch))
+    m, n = b.shape
+    sel = DistSparse(
+        rows=rows, cols=cols, vals=vals, nnz=nnz,
+        shape=(m, n // num_batches),
+        tile_shape=(b.tile_shape[0], wb),
+        grid_shape=b.grid_shape,
+        kind="B",
+    )
+    return sel, ovf

@@ -1,0 +1,262 @@
+"""Local (per-process) SpGEMM algorithms — the paper's §IV-D layer, TPU-adapted.
+
+The paper replaces sorted heap accumulation with *sort-free hash* SpGEMM/merge
+on CPUs. On TPU there is no efficient per-lane random scatter, so we adapt the
+insight (unsorted accumulation into a direct-addressed structure) as:
+
+  * ``spgemm_dense_acc`` — scatter/accumulate into a **dense accumulator**
+    (a perfect hash table with the identity hash). Batching (Alg. 4) makes the
+    output column block narrow, so the accumulator fits on-chip; this is the
+    default local multiply of the batched distributed algorithm and is backed
+    by a Pallas VMEM kernel (``repro.kernels.spgemm_acc``).
+  * ``spgemm_esc`` — expand–sort–compress, keeping *inputs unsorted* and only
+    producing sorted output at the final compress, mirroring the paper's
+    sortedness observation. Sorting maps to TPU-friendly sorting networks.
+  * ``spmm`` — sparse × dense (used by MoE dispatch and the dense-acc path).
+  * ``local_symbolic`` — Alg. 3's LocalSymbolic: flops (upper bound) and exact
+    output nnz of a local product, without forming values.
+
+All functions are jit-compatible with static capacities.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import semiring as sr
+from .sparse import SparseCOO, empty
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# SpMM: sparse A (m×k) times dense B (k×n) -> dense (m×n)
+# ---------------------------------------------------------------------------
+def spmm(a: SparseCOO, b_dense: Array, semiring: sr.Semiring = sr.PLUS_TIMES) -> Array:
+    """Gather rows of B by A's column index, scale, segment-reduce by A's row.
+
+    O(cap_A × n) work, fully vectorized; the Pallas kernel in
+    ``repro.kernels.spmm`` implements the same contraction with VMEM tiling.
+    """
+    m, k = a.shape
+    assert b_dense.shape[0] == k, (a.shape, b_dense.shape)
+    n = b_dense.shape[1]
+    # pad B with a zero row for sentinel column indices
+    b_pad = jnp.concatenate([b_dense, jnp.zeros((1, n), b_dense.dtype)], axis=0)
+    gathered = b_pad[a.cols]  # (cap, n)
+    prods = semiring.mul(a.vals[:, None], gathered)
+    prods = jnp.where(a.valid_mask()[:, None], prods, semiring.zero)
+    out = semiring.segment_reduce(prods, a.rows, num_segments=m + 1)[:m]
+    if semiring.add_kind != "sum":
+        out = jnp.where(jnp.isfinite(out), out, semiring.zero)  # empty segments
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dense-accumulator SpGEMM: sparse × sparse -> dense block
+# ---------------------------------------------------------------------------
+def spgemm_dense_acc(
+    a: SparseCOO, b: SparseCOO, semiring: sr.Semiring = sr.PLUS_TIMES
+) -> Array:
+    """C = A·B with a dense (m × n_b) accumulator.
+
+    TPU-native local multiply for the batched algorithm: ``b`` is a narrow
+    column block (n_b = n/(b·grid)), so the dense accumulator is small. B is
+    scattered to dense once (its nnz is small per batch), then a single SpMM
+    streams A's nonzeros through the accumulator.
+    """
+    m, k = a.shape
+    k2, nb = b.shape
+    assert k == k2, (a.shape, b.shape)
+    if semiring.add_kind == "sum":
+        b_dense = b.to_dense()
+        return spmm(a, b_dense, semiring)
+    # min/max semirings can't use a 0-initialized dense B (0 entries would
+    # participate); fall back to ESC for those.
+    raise ValueError(
+        f"dense-accumulator path requires sum-monoid semiring, got {semiring.name}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# ESC SpGEMM: expand - sort - compress (sparse × sparse -> sparse)
+# ---------------------------------------------------------------------------
+def _expand(a_csc: SparseCOO, b: SparseCOO, flops_cap: int, semiring: sr.Semiring):
+    """Enumerate all partial products of A·B.
+
+    ``a_csc`` must be column-major sorted. For each valid B entry t=(k,j,vB),
+    the products are A's column-k entries scaled by vB. Expansion uses the
+    standard offsets+cumsum trick with a static bound ``flops_cap``.
+
+    Returns (rows, cols, vals, valid, total_flops) each of length flops_cap.
+    """
+    m, k_dim = a_csc.shape
+    _, n = b.shape
+    # column pointer of A: start of each column in the sorted entry list
+    colcount = a_csc.col_counts()  # i32[k]
+    colptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(colcount).astype(jnp.int32)]
+    )  # i32[k+1]
+    ccount_pad = jnp.concatenate([colcount, jnp.zeros((1,), jnp.int32)])
+    colptr_pad = jnp.concatenate([colptr, jnp.zeros((1,), jnp.int32)])
+
+    bm = b.valid_mask()
+    cnt = jnp.where(bm, ccount_pad[b.cols], 0)  # products per B entry (cap_b,)
+    starts = jnp.cumsum(cnt) - cnt  # segment starts (exclusive cumsum)
+    total = starts[-1] + cnt[-1] if b.cap > 0 else jnp.int32(0)
+
+    # B-entry index per expanded slot e: scatter t at each (non-empty) segment
+    # start, then running max. Segments tile [starts[t], starts[t]+cnt[t])
+    # contiguously, so the largest start <= e identifies e's segment.
+    e = jnp.arange(flops_cap, dtype=jnp.int32)
+    starts_clip = jnp.where((cnt > 0) & (starts < flops_cap), starts, flops_cap)
+    tvals = jnp.arange(b.cap, dtype=jnp.int32)
+    buf = jnp.zeros((flops_cap + 1,), jnp.int32).at[starts_clip].max(tvals)
+    t_of_e = jax.lax.cummax(buf[:flops_cap])
+    t_of_e = jnp.clip(t_of_e, 0, b.cap - 1)
+    within = e - starts[t_of_e]  # offset within A's column
+    valid = (e < jnp.minimum(total, flops_cap)) & (within >= 0)
+
+    bk = b.cols[t_of_e]  # contraction index k
+    ai = colptr_pad[bk] + within  # index into sorted A entries
+    ai = jnp.clip(ai, 0, a_csc.cap - 1)
+    out_rows = jnp.where(valid, a_csc.rows[ai], m)
+    out_cols = jnp.where(valid, b.rows[t_of_e], n)  # note: B entry (k, j) -> col j
+    vals = semiring.mul(a_csc.vals[ai], b.vals[t_of_e])
+    vals = jnp.where(valid, vals, semiring.zero)
+    return out_rows, out_cols, vals, valid, total
+
+
+def spgemm_esc(
+    a: SparseCOO,
+    b: SparseCOO,
+    out_cap: int,
+    flops_cap: int,
+    semiring: sr.Semiring = sr.PLUS_TIMES,
+    a_is_colsorted: bool = False,
+) -> Tuple[SparseCOO, Array]:
+    """Sparse × sparse → sparse via expand–sort–compress.
+
+    Inputs need not be sorted (paper §IV-D: sort-free inputs); only the final
+    output is row-major sorted. Returns (C, overflow-count) where overflow > 0
+    means out_cap or flops_cap was too small (caller increases b / capacity).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    a_csc = a if a_is_colsorted else a.sort_colmajor()
+    # B entries as (k, j): transpose so cols hold k, rows hold j
+    bt = b.transpose()  # shape (n, k); entries (j, k) with rows=j? No: see below
+    # SparseCOO(b).transpose() swaps arrays: rows=old cols (j->k?), careful:
+    # b entry is (row=k, col=j). After transpose: row=j, col=k, shape (n, k).
+    rows, cols, vals, valid, total = _expand(a_csc, bt, flops_cap, semiring)
+    flop_overflow = jnp.maximum(total - flops_cap, 0)
+
+    expanded = SparseCOO(rows, cols, vals, jnp.int32(flops_cap), (m, n))
+    # coalesce = sort + segment-reduce (the single sort of the whole pipeline)
+    merged, overflow = _coalesce_semiring(expanded, valid, out_cap, semiring)
+    return merged, overflow + flop_overflow
+
+
+def _coalesce_semiring(
+    x: SparseCOO, valid: Array, new_cap: int, semiring: sr.Semiring
+):
+    """coalesce() generalized over semirings; `valid` marks live entries."""
+    m, n = x.shape
+    # push invalid entries to the end by sentinel keys, then sort row-major
+    rows = jnp.where(valid, x.rows, m)
+    cols = jnp.where(valid, x.cols, n)
+    order = jnp.lexsort((cols, rows))
+    rows, cols = rows[order], cols[order]
+    vals = x.vals[order]
+    vmask = rows < m
+    new_key = jnp.ones((x.cap,), dtype=bool)
+    if x.cap > 1:
+        same = (rows[1:] == rows[:-1]) & (cols[1:] == cols[:-1])
+        new_key = new_key.at[1:].set(~same)
+    new_key = new_key & vmask
+    seg = jnp.cumsum(new_key.astype(jnp.int32)) - 1
+    total = jnp.maximum(seg[-1] + 1, 0)
+    seg = jnp.where(vmask & (seg < new_cap), seg, new_cap)
+    out_rows = jnp.full((new_cap + 1,), m, jnp.int32).at[seg].min(rows)[:new_cap]
+    out_cols = jnp.full((new_cap + 1,), n, jnp.int32).at[seg].min(cols)[:new_cap]
+    if semiring.add_kind == "sum":
+        buf = jnp.zeros((new_cap + 1,), vals.dtype).at[seg].add(vals)
+    elif semiring.add_kind == "min":
+        buf = jnp.full((new_cap + 1,), jnp.inf, vals.dtype).at[seg].min(vals)
+    else:  # max
+        buf = jnp.full((new_cap + 1,), -jnp.inf, vals.dtype).at[seg].max(vals)
+    out_vals = buf[:new_cap]
+    nnz = jnp.minimum(total, new_cap).astype(jnp.int32)
+    pad = jnp.arange(new_cap) >= nnz
+    out_rows = jnp.where(pad, m, out_rows)
+    out_cols = jnp.where(pad, n, out_cols)
+    out_vals = jnp.where(pad, 0, out_vals).astype(x.vals.dtype)
+    overflow = (total - nnz).astype(jnp.int32)
+    return SparseCOO(out_rows, out_cols, out_vals, nnz, (m, n)), overflow
+
+
+def merge_sparse(parts, out_cap: int, semiring: sr.Semiring = sr.PLUS_TIMES):
+    """Merge-Layer / Merge-Fiber for the sparse path: sum duplicate coords.
+
+    Paper §IV-D hash-merge, TPU-adapted as one sort + segment-reduce over the
+    concatenated (unsorted!) entry lists — inputs stay unsorted, only the
+    merged result is sorted.
+    """
+    shape = parts[0].shape
+    for x in parts:
+        assert x.shape == shape
+    rows = jnp.concatenate([x.rows for x in parts])
+    cols = jnp.concatenate([x.cols for x in parts])
+    vals = jnp.concatenate([x.vals for x in parts])
+    valid = jnp.concatenate([x.valid_mask() for x in parts])
+    stacked = SparseCOO(rows, cols, vals, jnp.int32(rows.shape[0]), shape)
+    return _coalesce_semiring(stacked, valid, out_cap, semiring)
+
+
+# ---------------------------------------------------------------------------
+# Symbolic local multiply (Alg. 3 LocalSymbolic)
+# ---------------------------------------------------------------------------
+def local_symbolic_flops(a: SparseCOO, b: SparseCOO) -> Array:
+    """Number of partial products (flops/2) of A·B = Σ_t nnz(A(:, B.row_t)).
+
+    Upper bound on nnz of the *unmerged* local product — exactly what Alg. 3
+    accumulates per stage (the per-process unmerged D bound).
+    """
+    colcount = a.col_counts()
+    ccount_pad = jnp.concatenate([colcount, jnp.zeros((1,), jnp.int32)])
+    return jnp.sum(jnp.where(b.valid_mask(), ccount_pad[b.rows], 0))
+
+
+def local_symbolic_exact(a: SparseCOO, b: SparseCOO, flops_cap: int) -> Array:
+    """Exact nnz(A·B) via a boolean ESC without forming values (structure only)."""
+    m, _ = a.shape
+    _, n = b.shape
+    a_csc = a.sort_colmajor()
+    bt = b.transpose()
+    rows, cols, _, valid, total = _expand(a_csc, bt, flops_cap, sr.PLUS_TIMES)
+    rows = jnp.where(valid, rows, m)
+    cols = jnp.where(valid, cols, n)
+    order = jnp.lexsort((cols, rows))
+    rows, cols = rows[order], cols[order]
+    vmask = rows < m
+    new_key = jnp.ones((flops_cap,), dtype=bool)
+    if flops_cap > 1:
+        same = (rows[1:] == rows[:-1]) & (cols[1:] == cols[:-1])
+        new_key = new_key.at[1:].set(~same)
+    return jnp.sum(new_key & vmask).astype(jnp.int32)
+
+
+def nnz_per_col_upper(a_colcounts: Array, b: SparseCOO) -> Array:
+    """Per-output-column flops upper bound: ub[j] = Σ_{k in B(:,j)} nnz(A(:,k)).
+
+    Vector form of LocalSymbolic used by the distributed symbolic step to pick
+    per-batch capacities (col counts of A travel instead of tiles — the
+    lightweight payload that makes Alg. 3 cheap).
+    """
+    _, n = b.shape
+    cc = jnp.concatenate([a_colcounts, jnp.zeros((1,), a_colcounts.dtype)])
+    contrib = jnp.where(b.valid_mask(), cc[b.rows], 0)
+    return jax.ops.segment_sum(contrib, b.cols, num_segments=n + 1)[:n]

@@ -1,0 +1,66 @@
+"""Semiring algebra for SpGEMM.
+
+The paper (§II-A) notes the algorithm applies over an arbitrary semiring S
+instead of (R, +, *) since no Strassen-like identities are used. We expose the
+semirings needed by the paper's applications:
+
+  plus_times  — numeric SpGEMM (HipMCL / protein similarity, Fig. 3/6/7)
+  or_and      — boolean / symbolic multiply (Alg. 3 LocalSymbolic exact-nnz mode)
+  min_plus    — shortest-path / tropical
+  max_times   — max-reliability (used by MCL-style pruning analyses)
+  plus_pair   — pair counting: mul(a,b)=1 — triangle counting (§V-B app (b))
+
+A semiring is (add, mul, zero, add_kind). ``add_kind`` names the monoid so the
+compress step of ESC SpGEMM can pick the matching ``jax.ops.segment_*``
+reduction (TPU-friendly: segment reductions lower to sorted scatter-adds /
+maxes instead of generic loops).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    add_kind: str  # one of: "sum", "min", "max" — selects segment reduction
+    mul: Callable[[Array, Array], Array]
+    zero: float  # additive identity (also the padding value)
+
+    def segment_reduce(self, vals: Array, segids: Array, num_segments: int) -> Array:
+        import jax
+
+        if self.add_kind == "sum":
+            return jax.ops.segment_sum(vals, segids, num_segments=num_segments)
+        if self.add_kind == "min":
+            return jax.ops.segment_min(vals, segids, num_segments=num_segments)
+        if self.add_kind == "max":
+            return jax.ops.segment_max(vals, segids, num_segments=num_segments)
+        raise ValueError(f"unknown add_kind {self.add_kind}")
+
+    def add(self, a: Array, b: Array) -> Array:
+        if self.add_kind == "sum":
+            return a + b
+        if self.add_kind == "min":
+            return jnp.minimum(a, b)
+        if self.add_kind == "max":
+            return jnp.maximum(a, b)
+        raise ValueError(self.add_kind)
+
+
+PLUS_TIMES = Semiring("plus_times", "sum", lambda a, b: a * b, 0.0)
+OR_AND = Semiring("or_and", "max", lambda a, b: jnp.minimum(a, b), 0.0)  # on {0,1}
+MIN_PLUS = Semiring("min_plus", "min", lambda a, b: a + b, jnp.inf)
+MAX_TIMES = Semiring("max_times", "max", lambda a, b: a * b, 0.0)  # nonneg values
+PLUS_PAIR = Semiring("plus_pair", "sum", lambda a, b: jnp.ones_like(a), 0.0)
+
+REGISTRY = {s.name: s for s in [PLUS_TIMES, OR_AND, MIN_PLUS, MAX_TIMES, PLUS_PAIR]}
+
+
+def get(name: str) -> Semiring:
+    return REGISTRY[name]

@@ -1,0 +1,318 @@
+"""SUMMA2D/3D sparse multiply on the grid mesh (paper Alg. 1 + Alg. 2).
+
+One shard_map'd step computes a full 3D multiply for one batch:
+
+  1. A-Broadcast / B-Broadcast (Alg. 1 lines 5-6): realized as
+     ``lax.all_gather`` along the grid row/column axes — the bulk equivalent
+     of the per-stage broadcasts (same α-β bandwidth: every tile traverses
+     its communicator once; see benchmarks/bench_comm_model.py for the
+     Table II reconciliation). Because the contraction ranges of the
+     gathered stage tiles are disjoint, all `pc` stages fuse into ONE local
+     multiply over the concatenated entry lists (contraction index =
+     stage * (w/l) + local index) — Local-Multiply and Merge-Layer collapse
+     into the same sort-free accumulation, which is the TPU rendering of the
+     paper's "merge once after all stages" observation (§III-A).
+  2. Local-Multiply (Alg. 1 line 7): dense-accumulator path (spmm into a
+     dense D tile — identity-hash accumulator) or sparse ESC path
+     (expand-sort-compress with static capacities from the symbolic step).
+  3. AllToAll-Fiber + Merge-Fiber (Alg. 2 lines 4-6): dense path lowers the
+     pair to ONE ``lax.psum_scatter`` over the layer axis (all-to-all + local
+     add is exactly reduce-scatter); sparse path does the literal
+     ``lax.all_to_all`` of column pieces followed by a sort-free merge.
+
+Sentinel discipline: before gathering, every device rewrites its padding
+entries to the *global* contraction sentinel (k_tot) so offset arithmetic
+cannot alias padding onto real coordinates; values are zero as a second
+guarantee.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import semiring as sr
+from .distsparse import DistSparse
+from .grid import COL_AX, LAYER_AX, ROW_AX, Grid
+from .local_spgemm import spgemm_esc, spmm, merge_sparse
+from .sparse import SparseCOO
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchCaps:
+    """Static capacities for one batch of the multiply (symbolic-step output)."""
+
+    flops_cap: int  # ESC expansion slots per process
+    d_cap: int  # unmerged D tile entries per process (sparse path)
+    piece_cap: int  # per-fiber-piece entries (sparse path)
+    c_cap: int  # merged C tile entries per process (sparse path)
+
+
+def _squeeze_tile(d: DistSparse) -> SparseCOO:
+    """Inside shard_map: (1,1,1,cap) blocks -> local SparseCOO tile."""
+    return SparseCOO(
+        d.rows.reshape(-1),
+        d.cols.reshape(-1),
+        d.vals.reshape(-1),
+        d.nnz.reshape(()),
+        d.tile_shape,
+    )
+
+
+def _gather_A(a: SparseCOO) -> SparseCOO:
+    """A-Broadcast: gather stage tiles along the grid row; re-index columns
+    to the per-layer contraction space (stage s occupies [s*wl, (s+1)*wl))."""
+    tm, wl = a.shape
+    s = lax.axis_index(COL_AX)
+    pc = lax.axis_size(COL_AX)
+    k_tot = pc * wl
+    valid = a.valid_mask()
+    rows = jnp.where(valid, a.rows, tm)
+    cols = jnp.where(valid, a.cols + s * wl, k_tot)
+    vals = jnp.where(valid, a.vals, 0)
+    g_rows = lax.all_gather(rows, COL_AX).reshape(-1)
+    g_cols = lax.all_gather(cols, COL_AX).reshape(-1)
+    g_vals = lax.all_gather(vals, COL_AX).reshape(-1)
+    cap = g_rows.shape[0]
+    # padding is self-masking (zero vals + sentinels); declare all slots live
+    return SparseCOO(g_rows, g_cols, g_vals, jnp.int32(cap), (tm, k_tot))
+
+
+def _gather_B(b: SparseCOO) -> SparseCOO:
+    """B-Broadcast: gather stage tiles along the grid column; re-index rows
+    to the per-layer contraction space (stage i occupies [i*wl, (i+1)*wl))."""
+    wl, tn = b.shape
+    i = lax.axis_index(ROW_AX)
+    pr = lax.axis_size(ROW_AX)
+    k_tot = pr * wl
+    valid = b.valid_mask()
+    rows = jnp.where(valid, b.rows + i * wl, k_tot)
+    cols = jnp.where(valid, b.cols, tn)
+    vals = jnp.where(valid, b.vals, 0)
+    g_rows = lax.all_gather(rows, ROW_AX).reshape(-1)
+    g_cols = lax.all_gather(cols, ROW_AX).reshape(-1)
+    g_vals = lax.all_gather(vals, ROW_AX).reshape(-1)
+    cap = g_rows.shape[0]
+    return SparseCOO(g_rows, g_cols, g_vals, jnp.int32(cap), (k_tot, tn))
+
+
+# ---------------------------------------------------------------------------
+# Dense-accumulator path — two broadcast schedules
+# ---------------------------------------------------------------------------
+#  "allgather": bulk realization — both operands gathered once (same α-β
+#      bandwidth as √(p/l) broadcasts, √(p/l)× the tile memory). Fast and
+#      simple; the default.
+#  "ring": Cannon-style memory-constrained realization — initial skew
+#      (A[i,j] ← A[i,(j+i) mod pc], B[i,j] ← B[(i+j) mod pr, j]) followed by
+#      per-stage multiply + unit ppermute shifts. O(1) extra tiles: the
+#      schedule the paper's memory-constrained regime actually wants (§IV-A
+#      counts unmerged results against the same budget the gathered copies
+#      would eat). The skew runs as a tile-index gather OUTSIDE shard_map
+#      (XLA partitions it into collective-permutes).
+def _skew(d: DistSparse, kind: str, grid: Grid) -> DistSparse:
+    pr, pc = grid.pr, grid.pc
+    i = jnp.arange(pr)[:, None]
+    j = jnp.arange(pc)[None, :]
+    if kind == "A":  # shift row i left by i: new[i,j] = old[i, (j+i) % pc]
+        src = (j + i) % pc
+        gather = lambda x: jnp.take_along_axis(
+            x, src[:, :, None, None].astype(jnp.int32), axis=1
+        ) if x.ndim == 4 else jnp.take_along_axis(
+            x, src[:, :, None].astype(jnp.int32), axis=1
+        )
+    else:  # B: shift col j up by j: new[i,j] = old[(i+j) % pr, j]
+        src = (i + j) % pr
+        gather = lambda x: jnp.take_along_axis(
+            x, src[:, :, None, None].astype(jnp.int32), axis=0
+        ) if x.ndim == 4 else jnp.take_along_axis(
+            x, src[:, :, None].astype(jnp.int32), axis=0
+        )
+    return DistSparse(
+        rows=gather(d.rows), cols=gather(d.cols), vals=gather(d.vals),
+        nnz=gather(d.nnz), shape=d.shape, tile_shape=d.tile_shape,
+        grid_shape=d.grid_shape, kind=d.kind,
+    )
+
+
+def summa3d_dense_step(
+    a: DistSparse, b_batch: DistSparse, grid: Grid,
+    semiring: sr.Semiring = sr.PLUS_TIMES,
+    schedule: str = "allgather",
+) -> Array:
+    """One batched-SUMMA3D step, dense-accumulator path.
+
+    ``b_batch`` is the batch's column block of B (still kind="B" layout,
+    tn = w/b). Returns the C batch as stacked dense tiles
+    (pr, pc, l, tm, tn/l) — fiber merge included (psum_scatter).
+    """
+    assert semiring.add_kind == "sum", "dense path requires a sum monoid"
+    tm_a, wl_a = a.tile_shape
+    _, tn_b = b_batch.tile_shape
+    l = grid.l
+    assert tn_b % l == 0
+
+    if schedule == "ring":
+        assert grid.pr == grid.pc, "Cannon ring needs a square layer grid"
+        a = _skew(a, "A", grid)
+        b_batch = _skew(b_batch, "B", grid)
+
+        def step(a_t: DistSparse, b_t: DistSparse) -> Array:
+            a_loc = _squeeze_tile(a_t)
+            b_loc = _squeeze_tile(b_t)
+            pc = grid.pc
+            ring_a = [(s, (s - 1) % pc) for s in range(pc)]  # shift left
+            ring_b = [(s, (s - 1) % pc) for s in range(pc)]  # shift up
+
+            def stage(t, carry):
+                ar, ac, av, br, bc, bv, acc = carry
+                # local multiply of the aligned stage tiles; local indices
+                # already pair up (both tiles come from the same k-block)
+                a_cur = SparseCOO(ar, ac, jnp.where(ar < tm_a, av, 0),
+                                  jnp.int32(ar.shape[0]), (tm_a, wl_a))
+                b_dense = SparseCOO(br, bc, jnp.where(bc < tn_b, bv, 0),
+                                    jnp.int32(br.shape[0]),
+                                    (wl_a, tn_b)).to_dense()
+                acc = acc + spmm(a_cur, b_dense, semiring)
+                ar = lax.ppermute(ar, COL_AX, ring_a)
+                ac = lax.ppermute(ac, COL_AX, ring_a)
+                av = lax.ppermute(av, COL_AX, ring_a)
+                br = lax.ppermute(br, ROW_AX, ring_b)
+                bc = lax.ppermute(bc, ROW_AX, ring_b)
+                bv = lax.ppermute(bv, ROW_AX, ring_b)
+                return ar, ac, av, br, bc, bv, acc
+
+            init = (
+                a_loc.rows, a_loc.cols, a_loc.vals,
+                b_loc.rows, b_loc.cols, b_loc.vals,
+                jnp.zeros((tm_a, tn_b), jnp.float32),
+            )
+            *_, d_tile = lax.fori_loop(0, grid.pc, stage, init)
+            c_tile = lax.psum_scatter(
+                d_tile, LAYER_AX, scatter_dimension=1, tiled=True
+            )
+            return c_tile[None, None, None]
+    else:
+        def step(a_t: DistSparse, b_t: DistSparse) -> Array:
+            a_loc = _squeeze_tile(a_t)
+            b_loc = _squeeze_tile(b_t)
+            a_cat = _gather_A(a_loc)
+            b_cat = _gather_B(b_loc)
+            b_dense = b_cat.to_dense()  # (k_tot, tn_b) — narrow by batching
+            d_tile = spmm(a_cat, b_dense, semiring)  # (tm, tn_b) accumulator
+            # AllToAll-Fiber + Merge-Fiber == reduce-scatter along the fiber
+            c_tile = lax.psum_scatter(
+                d_tile, LAYER_AX, scatter_dimension=1, tiled=True
+            )  # (tm, tn_b/l)
+            return c_tile[None, None, None]
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    in_specs = (
+        DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
+                   shape=a.shape, tile_shape=a.tile_shape,
+                   grid_shape=a.grid_shape, kind=a.kind),
+        DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
+                   shape=b_batch.shape, tile_shape=b_batch.tile_shape,
+                   grid_shape=b_batch.grid_shape, kind=b_batch.kind),
+    )
+    fn = jax.shard_map(
+        step, mesh=grid.mesh, in_specs=in_specs, out_specs=spec3,
+        check_vma=False,
+    )
+    return fn(a, b_batch)
+
+
+# ---------------------------------------------------------------------------
+# Sparse (ESC) path
+# ---------------------------------------------------------------------------
+def summa3d_sparse_step(
+    a: DistSparse, b_batch: DistSparse, grid: Grid, caps: BatchCaps,
+    semiring: sr.Semiring = sr.PLUS_TIMES,
+) -> Tuple[DistSparse, Array]:
+    """One batched-SUMMA3D step, sparse path. Returns (C tiles, overflow).
+
+    C tiles come back as a DistSparse with tile shape (tm, tn_b/l); the
+    global column mapping is block-cyclic (see batched.batch_column_map).
+    overflow > 0 means a static capacity was exceeded — the driver retries
+    with the next larger capacity plan (paper robustness, §IV-A).
+    """
+    tm_a, _ = a.tile_shape
+    _, tn_b = b_batch.tile_shape
+    l = grid.l
+    assert tn_b % l == 0
+    piece_w = tn_b // l
+
+    def step(a_t: DistSparse, b_t: DistSparse):
+        a_loc = _squeeze_tile(a_t)
+        b_loc = _squeeze_tile(b_t)
+        a_cat = _gather_A(a_loc)
+        b_cat = _gather_B(b_loc)
+        d_tile, ovf_mul = spgemm_esc(
+            a_cat, b_cat, out_cap=caps.d_cap, flops_cap=caps.flops_cap,
+            semiring=semiring,
+        )  # (tm, tn_b) sparse, row-major sorted
+        # ColSplit (Alg. 2 line 4): l column pieces, remapped to [0, piece_w)
+        pieces_r, pieces_c, pieces_v, pieces_n = [], [], [], []
+        ovf_split = jnp.int32(0)
+        for k in range(l):
+            piece, ovf = d_tile.select_col_block(k * piece_w, piece_w, caps.piece_cap)
+            ovf_split = ovf_split + ovf
+            pieces_r.append(piece.rows)
+            pieces_c.append(piece.cols)
+            pieces_v.append(piece.vals)
+            pieces_n.append(piece.nnz)
+        pr_ = jnp.stack(pieces_r)  # (l, piece_cap)
+        pc_ = jnp.stack(pieces_c)
+        pv_ = jnp.stack(pieces_v)
+        pn_ = jnp.stack(pieces_n)
+        # AllToAll-Fiber (Alg. 2 line 5)
+        pr_ = lax.all_to_all(pr_, LAYER_AX, split_axis=0, concat_axis=0)
+        pc_ = lax.all_to_all(pc_, LAYER_AX, split_axis=0, concat_axis=0)
+        pv_ = lax.all_to_all(pv_, LAYER_AX, split_axis=0, concat_axis=0)
+        pn_ = lax.all_to_all(pn_[:, None], LAYER_AX, split_axis=0, concat_axis=0)[:, 0]
+        # Merge-Fiber (Alg. 2 line 6): sort-free merge of l received pieces
+        parts = [
+            SparseCOO(pr_[k], pc_[k], pv_[k], pn_[k], (tm_a, piece_w))
+            for k in range(l)
+        ]
+        c_tile, ovf_merge = merge_sparse(parts, caps.c_cap, semiring)
+        ovf = ovf_mul + ovf_split + ovf_merge
+        ovf_global = lax.pmax(lax.pmax(lax.pmax(ovf, ROW_AX), COL_AX), LAYER_AX)
+        return (
+            c_tile.rows[None, None, None],
+            c_tile.cols[None, None, None],
+            c_tile.vals[None, None, None],
+            c_tile.nnz[None, None, None],
+            ovf_global,
+        )
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    spec0 = jax.sharding.PartitionSpec()
+    in_specs = (
+        DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
+                   shape=a.shape, tile_shape=a.tile_shape,
+                   grid_shape=a.grid_shape, kind=a.kind),
+        DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
+                   shape=b_batch.shape, tile_shape=b_batch.tile_shape,
+                   grid_shape=b_batch.grid_shape, kind=b_batch.kind),
+    )
+    fn = jax.shard_map(
+        step, mesh=grid.mesh, in_specs=in_specs,
+        out_specs=(spec3, spec3, spec3, spec3, spec0),
+        check_vma=False,
+    )
+    rows, cols, vals, nnz, ovf = fn(a, b_batch)
+    m, n = a.shape
+    c = DistSparse(
+        rows=rows, cols=cols, vals=vals, nnz=nnz,
+        shape=(m, b_batch.shape[1]),
+        tile_shape=(tm_a, piece_w),
+        grid_shape=a.grid_shape,
+        kind="C",
+    )
+    return c, ovf

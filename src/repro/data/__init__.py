@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, Prefetcher, synthetic_batch  # noqa: F401

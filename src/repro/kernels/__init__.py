@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (§IV-D), with
+pure-jnp oracles (ref.py) and jit'd wrappers (ops.py).
+
+  spmm.py        sparse × dense   (MoE dispatch; dense-accumulator SpGEMM)
+  spgemm_acc.py  COO × COO → dense tile (sort-free paired SpGEMM, the paper's
+                 hash-SpGEMM adapted to the MXU/VMEM)
+  densify.py     COO → dense tile scatter
+
+See DESIGN.md §3 for the CPU-hash → TPU-dense-accumulator adaptation story.
+"""
+from . import ops, ref  # noqa: F401
+from .ops import densify, spgemm_paired, spmm  # noqa: F401

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: per-column threshold for top-k pruning (MCL hot path).
+
+HipMCL consumes every SpGEMM batch with column-wise selection (paper §V-C:
+"keeps top-k entries in each column"). The TPU-native realization avoids
+per-column sorting: an iterative per-column threshold refinement (bisection
+on value) runs entirely in VMEM on a dense batch block and emits, per
+column, the largest threshold t such that |{i : x[i,c] >= t}| <= k. The
+caller then keeps entries >= t — a masked select, no sort.
+
+Grid: (n_tiles,) over column tiles; each program bisects THRESH_ITERS times
+on its (m × n_blk) block (VPU reductions only).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+THRESH_ITERS = 24  # bisection steps — resolves ~1e-7 of the value range
+
+
+def _col_prune_kernel(x_ref, k_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)  # (m, n_blk)
+    k = k_ref[0]
+    lo = jnp.zeros((x.shape[1],), jnp.float32)
+    hi = jnp.max(jnp.abs(x), axis=0) + 1e-6
+
+    def body(i, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((jnp.abs(x) >= mid[None, :]).astype(jnp.int32), axis=0)
+        # too many survivors -> raise threshold (move lo up), else lower hi
+        take_hi = cnt > k
+        lo = jnp.where(take_hi, mid, lo)
+        hi = jnp.where(take_hi, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, THRESH_ITERS, body, (lo, hi))
+    out_ref[...] = hi  # smallest threshold with count <= k
+
+
+def col_topk_threshold_pallas(
+    x: jnp.ndarray, k: int, *, n_blk: int = 128, interpret: bool = True
+) -> jnp.ndarray:
+    """Per-column |value| threshold keeping at most k entries. x: (m, n)."""
+    m, n = x.shape
+    n_blk = min(n_blk, _rup(n, 128))
+    n_pad = _rup(n, n_blk)
+    xp = jnp.pad(x, ((0, 0), (0, n_pad - n)))
+    karr = jnp.full((1,), k, jnp.int32)
+    out = pl.pallas_call(
+        _col_prune_kernel,
+        grid=(n_pad // n_blk,),
+        in_specs=[
+            pl.BlockSpec((m, n_blk), lambda j: (0, j)),
+            pl.BlockSpec((1,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_blk,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=interpret,
+    )(xp, karr)
+    return out[:n]
+
+
+def col_topk_threshold_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Oracle: exact k-th largest |value| per column (sorted)."""
+    m, n = x.shape
+    a = jnp.abs(x.astype(jnp.float32))
+    svals = jnp.sort(a, axis=0)[::-1]  # descending per column
+    kth = svals[jnp.minimum(k - 1, m - 1)] if k <= m else jnp.zeros((n,))
+    counts = jnp.sum(a >= kth[None, :], axis=0)
+    return jnp.where(counts <= k, kth, kth + 0.0)
+
+
+def _rup(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,65 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``use_pallas`` selects the execution path:
+  * False (default on CPU): pure-jnp oracle path (``ref.py`` semantics) — this
+    is what the dry-run lowers, since Mosaic kernels don't lower to the CPU
+    backend.
+  * True: pl.pallas_call. On this container that means ``interpret=True``
+    (validation); on a real TPU pod the same call sites run compiled
+    (``interpret=False``).
+
+These wrappers accept the core ``SparseCOO`` type so the rest of the stack
+never touches raw entry lists.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.sparse import SparseCOO
+from . import ref
+from .densify import densify_pallas
+from .spgemm_acc import spgemm_paired_pallas
+from .spmm import spmm_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def spmm(a: SparseCOO, b_dense: jnp.ndarray, use_pallas: bool = False,
+         interpret: bool = not _ON_TPU) -> jnp.ndarray:
+    """Sparse (m×k) × dense (k×n) → dense (m×n) f32."""
+    m, _ = a.shape
+    vals = jnp.where(a.valid_mask(), a.vals, 0)
+    if use_pallas:
+        return spmm_pallas(a.rows, a.cols, vals, b_dense, m, interpret=interpret)
+    return ref.spmm_ref(a.rows, a.cols, vals, b_dense, m)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def spgemm_paired(a: SparseCOO, b: SparseCOO, use_pallas: bool = False,
+                  interpret: bool = not _ON_TPU) -> jnp.ndarray:
+    """Sparse (m×k) × sparse (k×n) → dense (m×n) f32 — sort-free paired kernel."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    av = jnp.where(a.valid_mask(), a.vals, 0)
+    bv = jnp.where(b.valid_mask(), b.vals, 0)
+    if use_pallas:
+        return spgemm_paired_pallas(
+            a.rows, a.cols, av, b.rows, b.cols, bv, m, n, interpret=interpret
+        )
+    return ref.spgemm_paired_ref(a.rows, a.cols, av, b.rows, b.cols, bv, m, n)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def densify(a: SparseCOO, use_pallas: bool = False,
+            interpret: bool = not _ON_TPU) -> jnp.ndarray:
+    """Padded COO → dense (m×n) f32."""
+    m, n = a.shape
+    vals = jnp.where(a.valid_mask(), a.vals, 0)
+    if use_pallas:
+        return densify_pallas(a.rows, a.cols, vals, m, n, interpret=interpret)
+    return ref.densify_ref(a.rows, a.cols, vals, m, n)

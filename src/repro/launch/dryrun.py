@@ -1,0 +1,390 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell we AOT-compile the real step function (train/prefill/decode —
+the same builders launch/train.py executes) against ShapeDtypeStruct inputs
+(zero allocation), then record:
+  * memory_analysis()  — per-device argument/output/temp bytes (fits HBM?)
+  * cost_analysis()    — per-device FLOPs + bytes accessed
+  * collective traffic — parsed from the optimized HLO (hlo_analysis)
+  * roofline terms     — compute/memory/collective seconds (v5e constants)
+
+Results append to a JSON file so the sweep is resumable (each cell is
+expensive to compile on one host core).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-20b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out results.json]
+  python -m repro.launch.dryrun --spgemm            # the paper's workloads
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, SHAPES, WORKLOADS, get_config, input_specs
+from ..models import transformer as tfm
+from ..models.common import batch_axes
+from ..optim import adamw
+from ..train.step import (
+    TrainConfig,
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+    shardings_for,
+)
+from . import hlo_analysis
+from .mesh import make_production_mesh
+
+RESULTS_DEFAULT = "dryrun_results.json"
+
+
+def _sds_like(shapes_tree, shardings_tree, force_dtype=None):
+    """ShapeDtypeStructs carrying shardings (AOT inputs; no allocation).
+    force_dtype: serving lowers against bf16 weights (training keeps f32
+    master weights; the checkpoint converter casts offline)."""
+    def one(s, sh):
+        dt = force_dtype if (force_dtype and jnp.issubdtype(s.dtype, jnp.floating)) else s.dtype
+        return jax.ShapeDtypeStruct(s.shape, dt, sharding=sh)
+    return jax.tree.map(one, shapes_tree, shardings_tree)
+
+
+def _analyze(lowered, compiled, mesh) -> Dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    world = mesh.devices.size
+    # loop-aware module costs: XLA's cost_analysis counts while (scan) bodies
+    # once; analyze_module multiplies by parsed trip counts (hlo_analysis).
+    mod = hlo_analysis.analyze_module(compiled.as_text(), world)
+    roof = hlo_analysis.Roofline(
+        flops=mod.flops,
+        hbm_bytes=mod.bytes,
+        wire_bytes=mod.total_wire_bytes,
+        compute_s=mod.flops / hlo_analysis.PEAK_FLOPS,
+        memory_s=mod.bytes / hlo_analysis.HBM_BW,
+        collective_s=mod.total_wire_bytes / hlo_analysis.ICI_BW,
+    )
+    return {
+        "devices": int(world),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_estimate_bytes": int(
+                mem.argument_size_in_bytes
+                + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes
+            ),
+        },
+        "cost": {
+            # loop-corrected per-device numbers (used for the roofline)
+            "flops_per_device": float(mod.flops),
+            "bytes_per_device": float(mod.bytes),
+            # raw XLA numbers (while bodies counted once) for reference
+            "xla_flops_body_once": float(cost.get("flops", 0.0)),
+            "xla_bytes_body_once": float(cost.get("bytes accessed", 0.0)),
+            "loop_trips": {k: int(v) for k, v in mod.loop_trips.items()},
+        },
+        "collectives": {
+            "counts": {k: float(v) for k, v in mod.coll_counts.items()},
+            "wire_bytes": {k: float(v) for k, v in mod.coll_wire.items()},
+            "total_wire_bytes": float(mod.total_wire_bytes),
+        },
+        "roofline": {
+            "compute_s": roof.compute_s,
+            "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s,
+            "dominant": roof.dominant,
+            "bound_s": roof.bound_s,
+        },
+    }
+
+
+def run_lm_cell(arch: str, shape_name: str, multi_pod: bool,
+                zero1: bool = True, extra_tag: str = "",
+                strategy: str = "tp", pad_heads: int = 0,
+                act_shard: Optional[str] = None,
+                master_opt: bool = False,
+                moe_capacity: float = 0.0) -> Dict:
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if pad_heads:
+        cfg = _dc.replace(cfg, pad_heads_to=pad_heads)
+    if act_shard:
+        cfg = _dc.replace(cfg, act_sharding=act_shard)
+    if moe_capacity and cfg.moe:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe,
+                                               capacity_factor=moe_capacity))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        tc = TrainConfig(
+            optimizer=adamw.AdamWConfig(zero1=zero1, master_in_opt=master_opt),
+            strategy=strategy,
+        )
+        p_sh, o_sh, b_sh, _, params_shapes = shardings_for(
+            cfg, mesh, tc, shape.global_batch
+        )
+        step_jit, _, _ = build_train_step(cfg, mesh, tc, shape.global_batch)
+        if master_opt:  # model weights bf16; f32 master in opt state
+            params_shapes = jax.tree.map(
+                lambda sd: jax.ShapeDtypeStruct(
+                    sd.shape,
+                    jnp.bfloat16 if jnp.issubdtype(sd.dtype, jnp.floating)
+                    else sd.dtype,
+                ),
+                params_shapes,
+            )
+        opt_shapes = jax.eval_shape(
+            lambda: adamw.init_opt_state(params_shapes, master_in_opt=master_opt)
+        )
+        batch_shapes = input_specs(cfg, shape)
+        lowered = step_jit.lower(
+            _sds_like(params_shapes, p_sh),
+            _sds_like(opt_shapes, o_sh),
+            _sds_like(batch_shapes, b_sh),
+        )
+        # MODEL_FLOPS = 6·N_active·D per step
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * cfg.active_param_count() * tokens
+    elif shape.kind == "prefill":
+        step_jit, sh = build_prefill_step(cfg, mesh, s_max=shape.seq_len,
+                                          batch=shape.global_batch)
+        tp = mesh.shape.get("model", 1)
+        pspecs = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s),
+            tfm.param_specs(cfg, tp),
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+        )
+        params_shapes = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+        batch_shapes = input_specs(cfg, shape)
+        i_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), batch_shapes
+        )["inputs"]
+        lowered = step_jit.lower(
+            _sds_like(params_shapes, pspecs, force_dtype=jnp.bfloat16), i_sds
+        )
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * cfg.active_param_count() * tokens
+    else:  # decode
+        step_jit, sh = build_decode_step(cfg, mesh, batch=shape.global_batch,
+                                         s_max=shape.seq_len)
+        tp = mesh.shape.get("model", 1)
+        pspecs = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s),
+            tfm.param_specs(cfg, tp),
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+        )
+        params_shapes = jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+        cache_shapes = jax.eval_shape(
+            lambda: tfm.init_cache(cfg, shape.global_batch, shape.seq_len)
+        )
+        batch_shapes = input_specs(cfg, shape)
+        i_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), batch_shapes
+        )["inputs"]
+        lowered = step_jit.lower(
+            _sds_like(params_shapes, pspecs, force_dtype=jnp.bfloat16),
+            _sds_like(cache_shapes, sh["cache"]),
+            i_sds,
+            jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        tokens = shape.global_batch
+        model_flops = 2 * cfg.active_param_count() * tokens
+
+    compiled = lowered.compile()
+    result = _analyze(lowered, compiled, mesh)
+    result.update(
+        arch=arch,
+        shape=shape_name,
+        mesh="multi" if multi_pod else "single",
+        kind=shape.kind,
+        tag=extra_tag,
+        compile_s=round(time.time() - t0, 1),
+        model_flops_total=float(model_flops),
+    )
+    hlo_total = result["cost"]["flops_per_device"] * result["devices"]
+    result["useful_flops_fraction"] = (
+        float(model_flops) / hlo_total if hlo_total else 0.0
+    )
+    print(compiled.memory_analysis())
+    print({k: v for k, v in result["cost"].items()})
+    return result
+
+
+def run_spgemm_cell(name: str, multi_pod: bool) -> Dict:
+    """Lower one batched-SUMMA3D step of the paper's workload on the
+    production mesh (grid = data×model×pod per DESIGN.md §5)."""
+    from ..core.batched import _sparse_jit
+    from ..core.distsparse import DistSparse
+    from ..core.grid import grid_from_mesh
+    from ..core.summa3d import BatchCaps
+
+    wl = WORKLOADS[name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    grid = grid_from_mesh(mesh, row_axis="data", col_axis="model",
+                          layer_axis="pod" if multi_pod else None)
+    pr, pc, l = grid.pr, grid.pc, grid.l
+    n = wl.n
+    t0 = time.time()
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(
+            shape, dtype, sharding=jax.sharding.NamedSharding(
+                grid.mesh, jax.sharding.PartitionSpec(*grid.axis_names)
+            )
+        )
+
+    cap = wl.cap_per_tile
+    tm_a, tn_a = n // pr, n // pc // l
+    tm_b, tn_b = n // pr // l, n // pc // wl.num_batches
+    a_sds = DistSparse(
+        rows=sds((pr, pc, l, cap), jnp.int32),
+        cols=sds((pr, pc, l, cap), jnp.int32),
+        vals=sds((pr, pc, l, cap), jnp.float32),
+        nnz=sds((pr, pc, l), jnp.int32),
+        shape=(n, n), tile_shape=(tm_a, tn_a), grid_shape=(pr, pc, l), kind="A",
+    )
+    bcap = max(cap // wl.num_batches * 2, 64)
+    b_sds = DistSparse(
+        rows=sds((pr, pc, l, bcap), jnp.int32),
+        cols=sds((pr, pc, l, bcap), jnp.int32),
+        vals=sds((pr, pc, l, bcap), jnp.float32),
+        nnz=sds((pr, pc, l), jnp.int32),
+        shape=(n, n // wl.num_batches), tile_shape=(tm_b, tn_b),
+        grid_shape=(pr, pc, l), kind="B",
+    )
+    caps = BatchCaps(flops_cap=wl.flops_cap, d_cap=wl.d_cap,
+                     piece_cap=wl.piece_cap, c_cap=wl.c_cap)
+    from ..core import semiring as sr
+    from ..core.summa3d import summa3d_sparse_step
+
+    lowered = jax.jit(
+        summa3d_sparse_step, static_argnames=("grid", "caps", "semiring")
+    ).lower(a_sds, b_sds, grid=grid, caps=caps, semiring=sr.get(wl.semiring))
+    compiled = lowered.compile()
+    result = _analyze(lowered, compiled, mesh)
+    # algorithmic flops for the batch: ~ nnz(A)/p rows × avg B per col...
+    total_nnz_a = wl.avg_nnz_per_row * n
+    flops_batch = 2 * total_nnz_a * wl.avg_nnz_per_row / wl.num_batches
+    result.update(
+        arch=name, shape=f"b{wl.num_batches}",
+        mesh="multi" if multi_pod else "single",
+        kind="spgemm", tag="", compile_s=round(time.time() - t0, 1),
+        model_flops_total=float(flops_batch),
+    )
+    print(compiled.memory_analysis())
+    return result
+
+
+def append_result(out_path: str, result: Dict) -> None:
+    data = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            data = json.load(f)
+    data = [
+        r for r in data
+        if not (r["arch"] == result["arch"] and r["shape"] == result["shape"]
+                and r["mesh"] == result["mesh"] and r.get("tag", "") == result.get("tag", ""))
+    ]
+    data.append(result)
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=1)
+
+
+def cell_applicable(arch: str, shape_name: str) -> bool:
+    cfg = get_config(arch)
+    if shape_name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--spgemm", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DEFAULT)
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--strategy", default="tp", choices=["tp", "dp"])
+    ap.add_argument("--pad-heads", type=int, default=0)
+    ap.add_argument("--act-shard", default=None, choices=[None, "seq"])
+    ap.add_argument("--master-opt", action="store_true")
+    ap.add_argument("--moe-capacity", type=float, default=0.0)
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.spgemm:
+        for name in WORKLOADS:
+            for mp in meshes:
+                cells.append(("spgemm", name, None, mp))
+    elif args.all:
+        for arch in ARCHS:
+            for shape_name in SHAPES:
+                for mp in meshes:
+                    cells.append(("lm", arch, shape_name, mp))
+    else:
+        assert args.arch and args.shape
+        for mp in meshes:
+            cells.append(("lm", args.arch, args.shape, mp))
+
+    failures = 0
+    for kind, arch, shape_name, mp in cells:
+        mesh_name = "multi" if mp else "single"
+        if kind == "lm" and not cell_applicable(arch, shape_name):
+            append_result(args.out, {
+                "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "kind": "skip", "tag": args.tag,
+                "skip_reason": "full-attention arch at 512k decode context "
+                               "(sub-quadratic state required; DESIGN.md §4)",
+            })
+            print(f"SKIP {arch} {shape_name} {mesh_name}")
+            continue
+        try:
+            print(f"=== {arch} {shape_name or ''} {mesh_name} ===", flush=True)
+            if kind == "spgemm":
+                res = run_spgemm_cell(arch, mp)
+            else:
+                res = run_lm_cell(arch, shape_name, mp,
+                                  zero1=not args.no_zero1, extra_tag=args.tag,
+                                  strategy=args.strategy,
+                                  pad_heads=args.pad_heads,
+                                  act_shard=args.act_shard,
+                                  master_opt=args.master_opt,
+                                  moe_capacity=args.moe_capacity)
+            append_result(args.out, res)
+            r = res["roofline"]
+            print(f"  -> dominant={r['dominant']} compute={r['compute_s']:.4f}s "
+                  f"memory={r['memory_s']:.4f}s collective={r['collective_s']:.4f}s "
+                  f"compile={res['compile_s']}s", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            append_result(args.out, {
+                "arch": arch, "shape": shape_name or "", "mesh": mesh_name,
+                "kind": "error", "tag": args.tag,
+                "error": traceback.format_exc()[-2000:],
+            })
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

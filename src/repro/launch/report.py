@@ -1,0 +1,116 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the sweep JSON.
+
+  python -m repro.launch.report [--results dryrun_results.json]
+prints markdown to stdout (EXPERIMENTS.md embeds the output).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 1e9:
+        return f"{b / 1e9:.1f}G"
+    if b >= 1e6:
+        return f"{b / 1e6:.1f}M"
+    return f"{b / 1e3:.0f}K"
+
+
+def roofline_table(rows, mesh: str) -> str:
+    out = [
+        f"### Roofline — {'single-pod 16×16 (256 chips)' if mesh == 'single' else 'multi-pod 2×16×16 (512 chips)'}",
+        "",
+        "| arch | shape | dominant | compute_s | memory_s | collective_s | "
+        "MODEL/HLO flops | peak GB/dev | fits HBM | one-line diagnosis |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: (x["arch"], x.get("shape", ""))):
+        if r["mesh"] != mesh:
+            continue
+        if r.get("kind") == "skip":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — | — | "
+                f"SKIP: {r.get('skip_reason', '')[:70]} |"
+            )
+            continue
+        if r.get("kind") == "error":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |")
+            continue
+        roof = r["roofline"]
+        peak = r["memory"]["peak_estimate_bytes"]
+        fits = "yes" if peak <= HBM_PER_CHIP else f"NO ({peak/1e9:.0f}G)"
+        useful = r.get("useful_flops_fraction", 0)
+        diag = _diagnose(r)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | **{roof['dominant']}** | "
+            f"{roof['compute_s']:.4f} | {roof['memory_s']:.4f} | "
+            f"{roof['collective_s']:.4f} | {useful:.2f} | {peak/1e9:.1f} | "
+            f"{fits} | {diag} |"
+        )
+    return "\n".join(out)
+
+
+def _diagnose(r) -> str:
+    roof = r["roofline"]
+    dom = roof["dominant"]
+    kind = r.get("kind")
+    if dom == "collective":
+        ag = r["collectives"]["wire_bytes"].get("all-gather", 0)
+        ar = r["collectives"]["wire_bytes"].get("all-reduce", 0)
+        a2a = r["collectives"]["wire_bytes"].get("all-to-all", 0)
+        big = max((("AG", ag), ("AR", ar), ("A2A", a2a)), key=lambda t: t[1])
+        return (f"{big[0]} traffic {fmt_bytes(big[1])}/dev — shrink activation "
+                f"collectives (resharding / DP / hierarchy)")
+    if dom == "memory":
+        if kind == "decode":
+            return "cache/weight reads dominate — shard cache further or quantize"
+        return "activation+weight traffic — remat policy / SP / fusion"
+    return "compute-bound — near roofline for this sharding"
+
+
+def dryrun_summary(rows) -> str:
+    n_ok = sum(1 for r in rows if r.get("kind") not in ("skip", "error"))
+    n_skip = sum(1 for r in rows if r.get("kind") == "skip")
+    n_err = sum(1 for r in rows if r.get("kind") == "error")
+    out = [
+        f"Cells compiled: **{n_ok}**, documented skips: **{n_skip}**, "
+        f"errors: **{n_err}**.",
+        "",
+        "| arch | shape | mesh | devices | args GB/dev | temps GB/dev | "
+        "collective counts (loop-corrected) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda x: (x["arch"], x.get("shape", ""), x["mesh"])):
+        if r.get("kind") in ("skip", "error"):
+            continue
+        cc = ", ".join(f"{k}:{int(v)}" for k, v in
+                       sorted(r["collectives"]["counts"].items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['devices']} | "
+            f"{r['memory']['argument_bytes']/1e9:.2f} | "
+            f"{r['memory']['temp_bytes']/1e9:.2f} | {cc} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_results.json")
+    ap.add_argument("--section", default="all", choices=["all", "dryrun", "roofline"])
+    args = ap.parse_args()
+    with open(args.results) as f:
+        rows = json.load(f)
+    if args.section in ("all", "dryrun"):
+        print(dryrun_summary(rows))
+        print()
+    if args.section in ("all", "roofline"):
+        print(roofline_table(rows, "single"))
+        print()
+        print(roofline_table(rows, "multi"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Production serving launcher: continuous-batching engine on the mesh.
+
+  python -m repro.launch.serve --arch granite-20b --smoke --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--s-max", type=int, default=128)
+    args = ap.parse_args()
+
+    import numpy as np
+    import jax
+    from jax.sharding import AxisType
+
+    from ..configs import get_config
+    from ..models import transformer as tfm
+    from ..serve import EngineConfig, Request, ServeEngine
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    ndev = len(jax.devices())
+    model = 2 if ndev >= 2 else 1
+    mesh = jax.make_mesh((max(ndev // model, 1), model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    with jax.set_mesh(mesh):
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, params, mesh,
+                          EngineConfig(max_batch=args.max_batch, s_max=args.s_max))
+        rng = np.random.default_rng(0)
+        for rid in range(args.requests):
+            plen = int(rng.integers(4, args.s_max // 4))
+            eng.submit(Request(rid=rid,
+                               prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+                               max_new_tokens=args.max_new))
+        done = eng.run_to_completion()
+    print(f"served {len(done)}/{args.requests} requests "
+          f"({sum(len(r.out_tokens) for r in done)} tokens generated)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,11 @@
+"""Model zoo: one decoder-LM implementation covering all assigned families."""
+from .transformer import (  # noqa: F401
+    ModelConfig,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    lm_loss,
+    param_specs,
+    prefill,
+)

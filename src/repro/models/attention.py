@@ -1,0 +1,155 @@
+"""Grouped-query attention with RoPE, optional sliding window and soft-cap.
+
+Covers the assigned archs' attention variants:
+  * GQA with arbitrary kv_heads (MQA kv=1 for granite-20b, MHA kv=32 for
+    musicgen/zamba2)
+  * gemma2-9b: alternating local (sliding-window) / global layers + attn
+    logit soft-capping
+  * prefill (causal over S) and single-token decode against a KV cache
+
+Tensor parallelism: q/k/v/o projections shard heads over the "model" axis
+via the specs in ``attention_specs`` — activations stay replicated over
+"model" inside the block (Megatron-style), with XLA inserting the two
+all-reduces per block.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import apply_rope, dense_init, soft_cap
+
+Array = jnp.ndarray
+
+
+def init_attention(key, d_model: int, n_heads: int, kv_heads: int, head_dim: int,
+                   dtype=jnp.float32, pad_heads_to: int = 0) -> Dict[str, Array]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(k1, (d_model, n_heads, head_dim), dtype=dtype),
+        "wk": dense_init(k2, (d_model, kv_heads, head_dim), dtype=dtype),
+        "wv": dense_init(k3, (d_model, kv_heads, head_dim), dtype=dtype),
+        "wo": dense_init(k4, (n_heads, head_dim, d_model), in_axis=0, dtype=dtype),
+    }
+    if pad_heads_to and pad_heads_to > n_heads:
+        # Mathematically-exact head padding (EXPERIMENTS.md §Perf): each GQA
+        # group is padded equally with zero heads (zero wq rows -> the pad
+        # heads compute garbage attention; zero wo rows -> it never reaches
+        # the output), so a 36-head model becomes a shardable 48-head model
+        # with identical function. Real head (g, j) lands at g*per_new + j,
+        # preserving the query->kv-group mapping under _repeat_kv.
+        assert pad_heads_to % kv_heads == 0, (pad_heads_to, kv_heads)
+        per_old = n_heads // kv_heads
+        per_new = pad_heads_to // kv_heads
+        wq = jnp.zeros((d_model, pad_heads_to, head_dim), dtype)
+        wo = jnp.zeros((pad_heads_to, head_dim, d_model), dtype)
+        for g in range(kv_heads):
+            wq = wq.at[:, g * per_new : g * per_new + per_old].set(
+                params["wq"][:, g * per_old : (g + 1) * per_old]
+            )
+            wo = wo.at[g * per_new : g * per_new + per_old].set(
+                params["wo"][g * per_old : (g + 1) * per_old]
+            )
+        params["wq"], params["wo"] = wq, wo
+    return params
+
+
+def attention_specs(n_heads: int = 0, kv_heads: int = 0, tp: int = 1) -> Dict[str, P]:
+    """TP specs with divisibility fallbacks: a head dim that doesn't divide
+    the model axis is replicated (e.g. MQA kv=1, starcoder2's 36 heads at
+    tp=16 — see EXPERIMENTS.md §Perf for the padded-heads optimization)."""
+    q_ax = "model" if tp > 1 and n_heads % tp == 0 else None
+    kv_ax = "model" if tp > 1 and kv_heads % tp == 0 else None
+    return {
+        "wq": P(None, q_ax, None),
+        "wk": P(None, kv_ax, None),
+        "wv": P(None, kv_ax, None),
+        "wo": P(q_ax, None, None),
+    }
+
+
+def _repeat_kv(x: Array, n_rep: int) -> Array:
+    """(B, S, kvH, hd) -> (B, S, kvH*n_rep, hd)"""
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d
+    )
+
+
+def _causal_mask(s_q: int, s_k: int, q_offset, window) -> Array:
+    """``window`` may be None, a python int, or a traced scalar (per-layer
+    alternation à la gemma2 passes it through lax.scan)."""
+    qpos = jnp.arange(s_q)[:, None] + q_offset
+    kpos = jnp.arange(s_k)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask  # (s_q, s_k)
+
+
+def attend(
+    params: Dict[str, Array],
+    x: Array,  # (B, S, D)
+    positions: Array,  # (B, S)
+    *,
+    rope_theta: float = 10_000.0,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    kv_cache: Optional[Tuple[Array, Array]] = None,  # (B, S_max, kvH, hd) x2
+    cache_index: Optional[Array] = None,  # scalar: current fill level
+    query_scale: Optional[float] = None,
+) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
+    """Returns (output (B,S,D), updated kv cache or None).
+
+    Prefill: kv_cache=None and S>=1 — causal over the block.
+    Decode:  kv_cache given, S==1 — attends over cache[:cache_index+1].
+    """
+    B, S, D = x.shape
+    n_heads = params["wq"].shape[1]
+    kv_heads = params["wk"].shape[1]
+    hd = params["wq"].shape[2]
+    n_rep = n_heads // kv_heads
+    scale = query_scale if query_scale is not None else hd ** -0.5
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    if kv_cache is None:
+        kf = _repeat_kv(k, n_rep)
+        vf = _repeat_kv(v, n_rep)
+        logits = jnp.einsum("bqhk,bshk->bhqs", q, kf) * scale
+        logits = soft_cap(logits, attn_softcap)
+        mask = _causal_mask(S, S, jnp.int32(0), window)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshk->bqhk", probs, vf)
+        new_cache = None
+    else:
+        ck, cv = kv_cache  # (B, S_max, kvH, hd)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_index, axis=1)
+        s_max = ck.shape[1]
+        kf = _repeat_kv(ck, n_rep)
+        vf = _repeat_kv(cv, n_rep)
+        logits = jnp.einsum("bqhk,bshk->bhqs", q, kf.astype(q.dtype)) * scale
+        logits = soft_cap(logits, attn_softcap)
+        kpos = jnp.arange(s_max)[None, :]
+        qpos = cache_index + jnp.arange(S)[:, None]
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqs,bshk->bqhk", probs, vf.astype(probs.dtype))
+        new_cache = (ck, cv)
+
+    y = jnp.einsum("bqhk,hkd->bqd", out, params["wo"])
+    return y, new_cache

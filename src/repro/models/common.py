@@ -1,0 +1,101 @@
+"""Shared model-building blocks: norms, RoPE, init, sharding-spec helpers.
+
+Everything is raw-JAX (params are nested dicts of arrays) — no framework
+dependency. Sharding is expressed as a parallel pytree of PartitionSpec
+produced by each module's ``*_specs`` function; ``repro.train.step`` turns
+those into NamedShardings for pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jnp.ndarray
+Params = Dict[str, Any]
+
+# Mesh axis conventions (see launch/mesh.py):
+#   "pod"  — slow inter-pod links; data parallel
+#   "data" — intra-pod data parallel
+#   "model"— tensor/expert parallel
+MODEL_AX = "model"
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """Axes the global batch is sharded over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def soft_cap(x: Array, cap: Optional[float]) -> Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10_000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10_000.0) -> Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32) -> Array:
+    """Scaled truncated-normal (fan-in)."""
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * std).astype(
+        dtype
+    )
+
+
+def embed_init(key, shape, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def param_count(params: Params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+def tree_specs_like(params: Params, spec_fn) -> Params:
+    """Map leaf -> PartitionSpec via spec_fn(path, leaf)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [spec_fn(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def zero1_shard_spec(spec: P, shape: Tuple[int, ...], dp_axes: Tuple[str, ...],
+                     dp_size: int) -> P:
+    """ZeRO-1: additionally shard an optimizer-state tensor over the data
+    axes on its first axis that is divisible and not already sharded."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, cur) in enumerate(zip(shape, entries)):
+        if cur is None and dim % dp_size == 0 and dim > 0:
+            entries[i] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            return P(*entries)
+    return spec  # nothing divisible — keep as-is

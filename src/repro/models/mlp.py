@@ -1,0 +1,51 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (starcoder-family)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import dense_init
+
+Array = jnp.ndarray
+
+
+GATED = ("swiglu", "geglu")
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> Dict[str, Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "w_in": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_out": dense_init(k2, (d_ff, d_model), dtype=dtype),
+    }
+    if act in GATED:
+        params["w_gate"] = dense_init(k3, (d_model, d_ff), dtype=dtype)
+    return params
+
+
+def mlp_specs(act: str, d_ff: int = 0, tp: int = 1) -> Dict[str, P]:
+    ax = "model" if tp > 1 and d_ff % tp == 0 else None
+    specs = {"w_in": P(None, ax), "w_out": P(ax, None)}
+    if act in GATED:
+        specs["w_gate"] = P(None, ax)
+    return specs
+
+
+def mlp(params: Dict[str, Array], x: Array, act: str) -> Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"])
+    if act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.silu(g) * h
+    elif act == "geglu":  # gemma2 gated-GELU
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.gelu(g, approximate=True) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "gelu_tanh":
+        h = jax.nn.gelu(h, approximate=True)
+    else:
+        raise ValueError(act)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"])

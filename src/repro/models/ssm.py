@@ -1,0 +1,259 @@
+"""Mamba2 — state-space duality (SSD) blocks [arXiv:2405.21060].
+
+Implements the chunked SSD algorithm (intra-chunk quadratic + inter-chunk
+state recurrence) for training/prefill, and the O(1)-state recurrent step for
+decode — this is what makes the ``long_500k`` shape runnable (no KV cache;
+state is (B, H, P, N) regardless of context length).
+
+Tensor parallelism: heads (d_inner) are sharded over "model"; B/C projections
+are grouped (n_groups=1) and replicated — the TP analogue used by Mamba2's
+own Megatron integration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import dense_init, rms_norm
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64  # P
+    expand: int = 2
+    d_conv: int = 4
+    n_groups: int = 1
+    chunk: int = 64
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+def init_mamba2(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> Dict[str, Array]:
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    gn = cfg.n_groups * cfg.d_state
+    conv_dim = di + 2 * gn
+    ks = jax.random.split(key, 8)
+    return {
+        "w_in_z": dense_init(ks[0], (d_model, di), dtype=dtype),
+        "w_in_x": dense_init(ks[1], (d_model, di), dtype=dtype),
+        "w_bc": dense_init(ks[2], (d_model, 2 * gn), dtype=dtype),
+        "w_dt": dense_init(ks[3], (d_model, nh), dtype=dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),  # A = -exp(A_log)
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "conv_w": dense_init(ks[4], (cfg.d_conv, conv_dim), in_axis=0, dtype=dtype),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "w_out": dense_init(ks[5], (di, d_model), dtype=dtype),
+    }
+
+
+def mamba2_specs(cfg: SSMConfig, d_model: int = 0, tp: int = 1) -> Dict[str, P]:
+    di = cfg.d_inner(d_model) if d_model else 0
+    nh = cfg.n_heads(d_model) if d_model else 0
+    di_ax = "model" if tp > 1 and di % tp == 0 and di > 0 else None
+    h_ax = "model" if tp > 1 and nh % tp == 0 and nh > 0 else None
+    return {
+        "w_in_z": P(None, di_ax),
+        "w_in_x": P(None, di_ax),
+        "w_bc": P(None, None),  # grouped B/C replicated (n_groups=1)
+        "w_dt": P(None, h_ax),
+        "dt_bias": P(h_ax),
+        "A_log": P(h_ax),
+        "D_skip": P(h_ax),
+        "conv_w": P(None, None),  # mixed x|B|C dims — keep replicated
+        "norm": P(di_ax),
+        "w_out": P(di_ax, None),
+    }
+
+
+def _segsum(x: Array) -> Array:
+    """(..., T) -> (..., T, T) cumulative segment sums; upper triangle -inf."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: Array,  # (B, S, H, P) — already dt-scaled inputs
+    a_dt: Array,  # (B, S, H) — dt * A (negative)
+    b: Array,  # (B, S, G, N)
+    c: Array,  # (B, S, G, N)
+    chunk: int,
+    h0: Optional[Array] = None,  # (B, H, P, N)
+) -> Tuple[Array, Array]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final state (B,H,P,N)).
+
+    Streams chunk-by-chunk through the inter-chunk recurrence: the quadratic
+    intra-chunk decay matrix L (chunk × chunk) only ever exists for ONE chunk
+    — peak temp memory is O(B·H·chunk²) instead of O(B·H·S·chunk), which is
+    what keeps the train_4k activations inside the v5e HBM budget (the
+    all-chunks-at-once einsum form needs ~50 GB/device at B_loc=16, S=4k).
+    """
+    B, S, H, Pd = x.shape
+    G, N = b.shape[2], b.shape[3]
+    assert G == 1, "n_groups=1 supported (mamba2 default); see DESIGN.md"
+    assert S % chunk == 0
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, H, Pd).transpose(1, 0, 2, 3, 4)  # (nc,B,l,H,P)
+    bc_ = b.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)  # (nc,B,l,N)
+    cc_ = c.reshape(B, nc, chunk, N).transpose(1, 0, 2, 3)
+    ac_ = a_dt.reshape(B, nc, chunk, H).transpose(1, 0, 3, 2)  # (nc,B,H,l)
+
+    init = (
+        h0.astype(jnp.float32) if h0 is not None
+        else jnp.zeros((B, H, Pd, N), jnp.float32)
+    )
+
+    def body(h, inp):
+        xk, bk, ck, ak = inp  # (B,l,H,P) (B,l,N) (B,l,N) (B,H,l)
+        a_cum = jnp.cumsum(ak, axis=-1)  # (B,H,l)
+        L = jnp.exp(_segsum(ak))  # (B,H,l,l) — one chunk only
+        y_diag = jnp.einsum("bln,bsn,bhls,bshp->blhp", ck, bk, L, xk)
+        # contribution of this chunk's inputs to the carried state
+        decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,H,l)
+        contrib = jnp.einsum("bln,bhl,blhp->bhpn", bk, decay_states, xk)
+        # contribution of the carried state to this chunk's outputs
+        state_decay = jnp.exp(a_cum)  # (B,H,l)
+        y_off = jnp.einsum("bln,bhpn,bhl->blhp", ck, h, state_decay)
+        h_new = h * jnp.exp(a_cum[..., -1])[..., None, None] + contrib.astype(
+            jnp.float32
+        )
+        return h_new, (y_diag + y_off).astype(x.dtype)
+
+    final, ys = jax.lax.scan(body, init, (xc, bc_, cc_, ac_))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Pd)
+    return y, final
+
+
+def _split_proj(params, x):
+    """x: (B,S,D) -> z, xbc_conv_input, dt (pre-activation)."""
+    z = jnp.einsum("bsd,de->bse", x, params["w_in_z"])
+    xi = jnp.einsum("bsd,de->bse", x, params["w_in_x"])
+    bc = jnp.einsum("bsd,de->bse", x, params["w_bc"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["w_dt"])
+    return z, jnp.concatenate([xi, bc], axis=-1), dt
+
+
+def mamba2_block(
+    params: Dict[str, Array],
+    x: Array,  # (B, S, D)
+    cfg: SSMConfig,
+    state: Optional[Tuple[Array, Array]] = None,  # (conv_state, ssm_state)
+    return_state: bool = False,
+):
+    """Prefill/training forward. state/return_state used by serving."""
+    B, S, D = x.shape
+    di = cfg.d_inner(D)
+    nh = cfg.n_heads(D)
+    gn = cfg.n_groups * cfg.d_state
+
+    z, xbc, dt = _split_proj(params, x)
+    # causal depthwise conv (kernel d_conv) over sequence
+    conv_in = xbc
+    if state is not None:
+        conv_in = jnp.concatenate([state[0].astype(xbc.dtype), xbc], axis=1)
+        pad = 0
+    else:
+        pad = cfg.d_conv - 1
+    conv_in = jnp.pad(conv_in, ((0, 0), (pad, 0), (0, 0)))
+    windows = jnp.stack(
+        [conv_in[:, i : i + S, :] for i in range(cfg.d_conv)], axis=-1
+    )  # (B,S,conv_dim,d_conv)
+    xbc = jax.nn.silu(jnp.einsum("bsck,kc->bsc", windows, params["conv_w"]))
+    new_conv_state = conv_in[:, -(cfg.d_conv - 1) :, :] if return_state else None
+
+    xi = xbc[..., :di].reshape(B, S, nh, cfg.head_dim)
+    bmat = xbc[..., di : di + gn].reshape(B, S, cfg.n_groups, cfg.d_state)
+    cmat = xbc[..., di + gn :].reshape(B, S, cfg.n_groups, cfg.d_state)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])  # (H,)
+    a_dt = dt * A  # (B,S,H)
+    x_scaled = (xi.astype(jnp.float32) * dt[..., None]).astype(xi.dtype)
+
+    # pad S up to a chunk multiple; padding carries decay=1 (a_dt=0) and
+    # zero inputs so outputs/state are exact
+    chunk = min(cfg.chunk, S)
+    s_pad = (S + chunk - 1) // chunk * chunk
+    if s_pad != S:
+        pad = s_pad - S
+        x_scaled = jnp.pad(x_scaled, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_dt = jnp.pad(a_dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    h0 = state[1] if state is not None else None
+    y, h_final = ssd_chunked(x_scaled, a_dt, bmat, cmat, chunk, h0=h0)
+    y = y[:, :S]
+    y = y + xi * params["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"]).astype(x.dtype)
+    if return_state:
+        return out, (new_conv_state, h_final)
+    return out
+
+
+def mamba2_decode_step(
+    params: Dict[str, Array],
+    x: Array,  # (B, 1, D)
+    cfg: SSMConfig,
+    state: Tuple[Array, Array],  # conv_state (B, d_conv-1, conv_dim), ssm (B,H,P,N)
+):
+    """Single-token recurrent step: h' = h·exp(dtA) + dt·x ⊗ B ; y = C·h."""
+    B, _, D = x.shape
+    di = cfg.d_inner(D)
+    nh = cfg.n_heads(D)
+    gn = cfg.n_groups * cfg.d_state
+    conv_state, h = state
+
+    z, xbc, dt = _split_proj(params, x)  # (B,1,*)
+    window = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)  # (B,d_conv,cd)
+    xbc_t = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, params["conv_w"]))
+    new_conv = window[:, 1:, :]
+
+    xi = xbc_t[:, :di].reshape(B, nh, cfg.head_dim)
+    bvec = xbc_t[:, di : di + gn].reshape(B, cfg.n_groups, cfg.d_state)
+    cvec = xbc_t[:, di + gn :].reshape(B, cfg.n_groups, cfg.d_state)
+    rep = nh // cfg.n_groups
+    bvec = jnp.repeat(bvec, rep, axis=1)  # (B,H,N)
+    cvec = jnp.repeat(cvec, rep, axis=1)
+
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt_t * A)  # (B,H)
+    x_dt = xi.astype(jnp.float32) * dt_t[..., None]  # (B,H,P)
+    h = h * decay[..., None, None] + jnp.einsum("bhp,bhn->bhpn", x_dt, bvec.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", h, cvec.astype(jnp.float32))
+    y = y + xi.astype(jnp.float32) * params["D_skip"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"]).astype(x.dtype)
+    return out, (new_conv, h)
+
+
+def init_mamba2_state(cfg: SSMConfig, d_model: int, batch: int, dtype=jnp.float32):
+    di = cfg.d_inner(d_model)
+    nh = cfg.n_heads(d_model)
+    gn = cfg.n_groups * cfg.d_state
+    conv_dim = di + 2 * gn
+    return (
+        jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        jnp.zeros((batch, nh, cfg.head_dim, cfg.d_state), jnp.float32),
+    )

@@ -1,0 +1,1 @@
+from . import adamw, compress  # noqa: F401

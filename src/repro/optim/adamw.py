@@ -1,0 +1,142 @@
+"""AdamW with global-norm clipping and ZeRO-1 optimizer-state sharding.
+
+Raw-pytree implementation (no optax dependency): state = (mu, nu, count).
+``opt_state_specs`` shards mu/nu over the data axes on top of the param's TP
+spec (ZeRO-1) — at 512 devices this cuts optimizer memory 32×, which is what
+lets the 20B arch fit the v5e HBM budget in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.common import batch_axes, zero1_shard_spec
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    zero1: bool = True
+    # master-in-opt (ZeRO-style mixed precision): model params live in bf16
+    # (replicated), the f32 master copy lives in the ZeRO-sharded optimizer
+    # state — gradient all-reduce and param all-gather run at bf16 width.
+    master_in_opt: bool = False
+
+
+def init_opt_state(params, master_in_opt: bool = False) -> Dict[str, Any]:
+    state = {
+        "mu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+    if master_in_opt:
+        def cast(p):
+            if isinstance(p, jax.ShapeDtypeStruct):  # AOT shape-only path
+                return jax.ShapeDtypeStruct(p.shape, jnp.float32)
+            return p.astype(jnp.float32)
+
+        state["master"] = jax.tree.map(cast, params)
+    return state
+
+
+def opt_state_specs(param_specs_tree, params_shapes, mesh, cfg: AdamWConfig):
+    """PartitionSpec tree for the optimizer state (ZeRO-1 over data axes)."""
+    dp = batch_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    return opt_state_specs_axes(param_specs_tree, params_shapes, dp, dp_size, cfg)
+
+
+def opt_state_specs_axes(param_specs_tree, params_shapes, dp_axes, dp_size: int,
+                         cfg: AdamWConfig):
+    """ZeRO-1 sharding over an explicit axis set (the "dp" strategy passes
+    (data, model) so optimizer state shards 256-way)."""
+
+    def one(spec, shaped):
+        if not cfg.zero1 or dp_size == 1:
+            return spec
+        return zero1_shard_spec(spec, shaped.shape, tuple(dp_axes), dp_size)
+
+    mu_specs = jax.tree.map(
+        one, param_specs_tree, params_shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    specs = {"mu": mu_specs, "nu": mu_specs, "count": P()}
+    if cfg.master_in_opt:
+        specs["master"] = mu_specs
+    return specs
+
+
+def _schedule(cfg: AdamWConfig, count: Array) -> Array:
+    warm = jnp.minimum(count.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state["count"] + 1
+    lr = _schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["mu"])
+    flat_v = jax.tree.leaves(state["nu"])
+    if "master" in state:
+        # update the f32 master (ZeRO-sharded), emit bf16 model weights
+        flat_master = jax.tree.leaves(state["master"])
+        outs = [upd(mp, g, m, v)
+                for mp, g, m, v in zip(flat_master, flat_g, flat_m, flat_v)]
+        new_master = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_params = jax.tree.map(
+            lambda mp, p: mp.astype(p.dtype), new_master, params
+        )
+        new_mu = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        new_nu = jax.tree.unflatten(tdef, [o[2] for o in outs])
+        return new_params, {"mu": new_mu, "nu": new_nu, "count": count,
+                            "master": new_master}, {
+            "grad_norm": gnorm, "lr": lr,
+        }
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_mu = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_nu = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}, {
+        "grad_norm": gnorm,
+        "lr": lr,
+    }

@@ -1,0 +1,91 @@
+"""Top-k sparsified gradient exchange with error feedback.
+
+Distributed-optimization trick for slow inter-pod links: before the data-
+parallel all-reduce, keep only the top-k magnitude entries of each gradient
+tensor (per device), accumulate the residual locally (error feedback, à la
+Deep Gradient Compression), and exchange the sparse entries. The sparse
+format is the core ``SparseCOO`` — the paper's memory-constrained machinery
+reused as a communication compressor (DESIGN.md §4).
+
+Exchange realization: within a jit step the compressed gradient is
+materialized as (values, flat indices) and the all-reduce runs over the
+densified-but-tiny buffer via scatter → psum → gather; on slow "pod" links
+this trades flops for an α–β win when density << link_bw/HBM_bw.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    density: float = 0.01  # fraction of entries kept
+    min_size: int = 4096  # tensors smaller than this are sent dense
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grad(g: Array, err: Array, cfg: CompressConfig) -> Tuple[Array, Array, Array]:
+    """Returns (values (k,), flat indices (k,), new error residual)."""
+    flat = g.astype(jnp.float32).reshape(-1) + err.reshape(-1)
+    k = max(int(flat.shape[0] * cfg.density), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    sel = flat[idx]
+    resid = flat.at[idx].set(0.0)
+    return sel, idx, resid.reshape(g.shape)
+
+
+def decompress(vals: Array, idx: Array, shape) -> Array:
+    size = 1
+    for s in shape:
+        size *= s
+    out = jnp.zeros((size,), jnp.float32).at[idx].add(vals)
+    return out.reshape(shape)
+
+
+def compress_tree(grads, err_state, cfg: CompressConfig):
+    """Apply EF-top-k to every large tensor; returns (sparse reps, new err)."""
+    flat, tdef = jax.tree.flatten(grads)
+    errs = jax.tree.leaves(err_state)
+    reps, new_errs = [], []
+    for g, e in zip(flat, errs):
+        if g.size < cfg.min_size:
+            reps.append(("dense", g))
+            new_errs.append(e)
+        else:
+            v, i, r = compress_grad(g, e, cfg)
+            reps.append(("topk", (v, i, g.shape)))
+            new_errs.append(r)
+    return (tdef, reps), jax.tree.unflatten(tdef, new_errs)
+
+
+def decompress_tree(compressed):
+    tdef, reps = compressed
+    outs = []
+    for kind, payload in reps:
+        if kind == "dense":
+            outs.append(payload)
+        else:
+            v, i, shape = payload
+            outs.append(decompress(v, i, shape))
+    return jax.tree.unflatten(tdef, outs)
+
+
+def compression_ratio(grads, cfg: CompressConfig) -> float:
+    """Bytes after / bytes before (for the comm-model benchmark)."""
+    total = sum(g.size for g in jax.tree.leaves(grads))
+    kept = 0
+    for g in jax.tree.leaves(grads):
+        if g.size < cfg.min_size:
+            kept += g.size
+        else:
+            kept += 2 * max(int(g.size * cfg.density), 1)  # vals + idx
+    return kept / total

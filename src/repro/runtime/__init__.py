@@ -1,0 +1,2 @@
+from .driver import FailureInjector, RuntimeConfig, StragglerEvent, run_training  # noqa: F401
+from .hierarchical import ClusterState, CrossClusterDP  # noqa: F401

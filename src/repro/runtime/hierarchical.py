@@ -1,0 +1,126 @@
+"""Hierarchical data parallelism with compressed inter-cluster gradients.
+
+At 1000+ nodes the fleet is rarely one flat mesh: pods/clusters have fast
+internal ICI but slow links between them (DCN/WAN). This driver runs one
+model replica per cluster (each internally sharded however it likes),
+exchanges ONLY error-feedback top-k compressed gradients across the slow
+boundary, and applies the identical summed update everywhere — replicas stay
+bit-identical without ever moving dense gradients between clusters.
+
+The compression machinery is the sparse core reused as a communication
+compressor (DESIGN.md §4): top-k gradients ARE a padded-COO vector.
+
+On this container, "clusters" are distinct jit calls on the same devices;
+the exchange math and the EF state threading are exactly what a real
+deployment ships, with the transport swapped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim import adamw, compress
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class ClusterState:
+    params: Any
+    opt: Any
+    err: Any  # error-feedback residual (compress.init_error_state)
+
+
+class CrossClusterDP:
+    """num_clusters model replicas; inter-cluster grads are EF-top-k sparse."""
+
+    def __init__(
+        self,
+        loss_fn: Callable[[Any, Any], Array],  # (params, batch) -> scalar
+        opt_cfg: adamw.AdamWConfig,
+        comp_cfg: compress.CompressConfig,
+        num_clusters: int = 2,
+    ):
+        self.loss_fn = loss_fn
+        self.opt_cfg = opt_cfg
+        self.comp_cfg = comp_cfg
+        self.num_clusters = num_clusters
+        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+        def compress_fn(grads, err):
+            (tdef, reps), new_err = compress.compress_tree(grads, err, comp_cfg)
+            return reps, new_err
+
+        # rep structure is static given shapes — jit the numeric parts per leaf
+        self._compress = compress_fn
+
+        def apply_fn(params, opt, g_sum):
+            return adamw.apply_updates(params, g_sum, opt, opt_cfg)
+
+        self._apply = jax.jit(apply_fn)
+
+    def init(self, params) -> List[ClusterState]:
+        return [
+            ClusterState(
+                params=jax.tree.map(jnp.copy, params),
+                opt=adamw.init_opt_state(params),
+                err=compress.init_error_state(params),
+            )
+            for _ in range(self.num_clusters)
+        ]
+
+    def step(
+        self, states: List[ClusterState], batches: List[Any]
+    ) -> Tuple[List[ClusterState], Dict[str, float]]:
+        """One global step: local grads -> compress -> exchange -> sum ->
+        identical update on every cluster."""
+        assert len(batches) == self.num_clusters
+        losses, compressed, errs = [], [], []
+        tdef = None
+        for st, batch in zip(states, batches):
+            loss, grads = self._grad_fn(st.params, batch)
+            losses.append(float(loss))
+            (tdef_i, reps), new_err = compress.compress_tree(
+                grads, st.err, self.comp_cfg
+            )
+            tdef = tdef_i
+            compressed.append(reps)
+            errs.append(new_err)
+        # --- the slow-link exchange: only (vals, idx) tuples cross clusters
+        wire_bytes = 0
+        n_leaves = len(compressed[0])
+        summed_leaves = []
+        for li in range(n_leaves):
+            kinds = {c[li][0] for c in compressed}
+            assert len(kinds) == 1
+            kind = kinds.pop()
+            if kind == "dense":
+                total = sum(c[li][1].astype(jnp.float32) for c in compressed)
+                wire_bytes += (self.num_clusters - 1) * int(
+                    compressed[0][li][1].size
+                ) * 4
+            else:
+                shape = compressed[0][li][1][2]
+                total = sum(
+                    compress.decompress(c[li][1][0], c[li][1][1], shape)
+                    for c in compressed
+                )
+                k = int(compressed[0][li][1][0].shape[0])
+                wire_bytes += (self.num_clusters - 1) * k * 8  # f32 val + i32 idx
+            summed_leaves.append(total / self.num_clusters)
+        g_sum = jax.tree.unflatten(tdef, summed_leaves)
+        new_states = []
+        metrics_last = {}
+        for st, err in zip(states, errs):
+            p, o, m = self._apply(st.params, st.opt, g_sum)
+            new_states.append(ClusterState(params=p, opt=o, err=err))
+            metrics_last = m
+        return new_states, {
+            "loss": float(np.mean(losses)),
+            "wire_bytes": float(wire_bytes),
+            "grad_norm": float(metrics_last.get("grad_norm", 0.0)),
+        }

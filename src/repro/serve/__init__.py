@@ -1,0 +1,1 @@
+from .engine import EngineConfig, Request, ServeEngine  # noqa: F401

@@ -1,0 +1,3 @@
+"""The paper's SpGEMM applications: Markov clustering (HipMCL), triangle
+counting, AA^T sequence-overlap detection (§V-B/C/G)."""
+from . import graph_algorithms, mcl  # noqa: F401

@@ -1,0 +1,1 @@
+from .step import TrainConfig, build_decode_step, build_prefill_step, build_train_step  # noqa: F401

@@ -1,0 +1,220 @@
+"""Jitted train/serve step builders with full sharding annotations.
+
+``build_train_step(cfg, mesh, opt)`` returns (step_fn, shardings) where
+step_fn(params, opt_state, batch) -> (params, opt_state, metrics) is jitted
+with explicit in/out shardings — the exact object the multi-pod dry-run
+lowers with ShapeDtypeStructs (launch/dryrun.py) and the training driver
+executes (launch/train.py).
+
+Sharding summary (DESIGN.md §5):
+  batch    P(("pod","data"), None)     — DP over pod+data axes
+  params   param_specs(cfg)            — TP over "model"
+  opt      ZeRO-1: params' spec + data-axis sharding on the first free axis
+  microbatching: optional grad accumulation via lax.scan (static count)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import transformer as tfm
+from ..models.common import batch_axes
+from ..optim import adamw
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    microbatches: int = 1  # grad accumulation steps per optimizer step
+    aux_weight: float = 0.01
+    # "tp": DP over (pod, data), TP over "model" (baseline).
+    # "dp": pure data parallel — batch sharded over (data, model) [+pod when
+    #       divisible], params replicated, optimizer state ZeRO-1 sharded
+    #       over ALL those axes. The EXPERIMENTS.md §Perf resharding.
+    strategy: str = "tp"
+
+
+def _dp_axes_for(mesh, train_cfg: TrainConfig, global_batch: int = 0):
+    if train_cfg.strategy == "dp":
+        axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+        if global_batch:
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            while axes and global_batch % size != 0:
+                size //= mesh.shape[axes[0]]
+                axes = axes[1:]  # drop the pod axis first
+        return axes
+    return batch_axes(mesh)
+
+
+def shardings_for(cfg: tfm.ModelConfig, mesh, train_cfg: TrainConfig,
+                  global_batch: int = 0):
+    """(param, opt, batch) NamedShardings + the spec trees."""
+    tp = mesh.shape.get("model", 1) if train_cfg.strategy == "tp" else 1
+    pspecs = tfm.param_specs(cfg, tp)
+    params_shapes = jax.eval_shape(
+        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    dp = _dp_axes_for(mesh, train_cfg, global_batch)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    ospecs = adamw.opt_state_specs_axes(
+        pspecs, params_shapes, dp, dp_size, train_cfg.optimizer
+    )
+    dspec = dp if len(dp) > 1 else dp[0]
+    if cfg.input_mode == "tokens":
+        bspecs = {"inputs": P(dspec, None), "targets": P(dspec, None)}
+    else:
+        bspecs = {"inputs": P(dspec, None, None), "targets": P(dspec, None)}
+
+    def ns(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    return (
+        ns(pspecs), ns(ospecs), ns(bspecs),
+        {"params": pspecs, "opt": ospecs, "batch": bspecs},
+        params_shapes,
+    )
+
+
+def build_train_step(cfg: tfm.ModelConfig, mesh, train_cfg: TrainConfig = TrainConfig(),
+                     global_batch: int = 0):
+    """Returns (jitted step_fn, dict of NamedShardings, params_shapes)."""
+    p_sh, o_sh, b_sh, specs, params_shapes = shardings_for(
+        cfg, mesh, train_cfg, global_batch
+    )
+    # "dp": batch is sharded over "model" too, so the vocab-parallel xent's
+    # shard_map specs don't apply — the plain (replicated-vocab) loss is used.
+    loss_mesh = mesh if train_cfg.strategy == "tp" else None
+
+    def loss_fn(params, batch):
+        return tfm.lm_loss(
+            cfg, params, batch["inputs"], batch["targets"], loss_mesh,
+            aux_weight=train_cfg.aux_weight,
+        )
+
+    # ZeRO gradient flow: constrain grads to the optimizer-state sharding so
+    # GSPMD lowers the data-parallel reduction as a reduce-scatter (at the
+    # gradient dtype) instead of a full f32 all-reduce; the updated params
+    # are then all-gathered back (bf16 when master_in_opt).
+    grad_hint = o_sh["mu"] if train_cfg.optimizer.zero1 else None
+
+    def _constrain_grads(grads):
+        if grad_hint is None:
+            return grads
+        # barrier: keeps the f32 upcast in the optimizer from being sunk into
+        # the backward loop (which would turn the grad reduction into a
+        # per-layer f32 all-reduce)
+        grads = jax.lax.optimization_barrier(grads)
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, grad_hint
+        )
+
+    def step(params, opt_state, batch):
+        if train_cfg.microbatches > 1:
+            mb = train_cfg.microbatches
+            resh = jax.tree.map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]), batch
+            )
+
+            def acc_body(carry, mbatch):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mbatch)
+                return (
+                    loss_acc + loss / mb,
+                    jax.tree.map(lambda a, g: a + g / mb, grad_acc, grads),
+                ), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (jnp.float32(0), zeros), resh)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads = _constrain_grads(grads)
+        new_params, new_opt, om = adamw.apply_updates(
+            params, grads, opt_state, train_cfg.optimizer
+        )
+        metrics = {"loss": loss, **om}
+        return new_params, new_opt, metrics
+
+    step_jit = jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return step_jit, {"params": p_sh, "opt": o_sh, "batch": b_sh,
+                      "specs": specs}, params_shapes
+
+
+def _dp_info(mesh):
+    dp = batch_axes(mesh)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    return (dp if len(dp) > 1 else dp[0]), size
+
+
+def build_decode_step(cfg: tfm.ModelConfig, mesh, batch: int,
+                      s_max: int = None):
+    """Jitted single-token decode with sharded KV/state cache."""
+    tp = mesh.shape.get("model", 1)
+    pspecs = tfm.param_specs(cfg, tp)
+    cspecs = tfm.cache_specs(cfg, mesh, batch, s_max)
+    dspec, dp_size = _dp_info(mesh)
+
+    def ns(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    p_sh, c_sh = ns(pspecs), ns(cspecs)
+    tok_rank = 2 if cfg.input_mode == "tokens" else 3
+    bax = dspec if batch % dp_size == 0 else None  # batch=1: replicate
+    t_sh = NamedSharding(mesh, P(*((bax,) + (None,) * (tok_rank - 1))))
+
+    def step(params, cache, inputs, cache_index):
+        return tfm.decode_step(cfg, params, cache, inputs, cache_index, mesh)
+
+    step_jit = jax.jit(
+        step,
+        in_shardings=(p_sh, c_sh, t_sh, None),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+    )
+    return step_jit, {"params": p_sh, "cache": c_sh, "specs":
+                      {"params": pspecs, "cache": cspecs}}
+
+
+def build_prefill_step(cfg: tfm.ModelConfig, mesh, s_max: int, batch: int):
+    tp = mesh.shape.get("model", 1)
+    pspecs = tfm.param_specs(cfg, tp)
+    cspecs = tfm.cache_specs(cfg, mesh, batch, s_max)
+    dspec, dp_size = _dp_info(mesh)
+
+    def ns(tree):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    p_sh, c_sh = ns(pspecs), ns(cspecs)
+    in_rank = 2 if cfg.input_mode == "tokens" else 3
+    bax = dspec if batch % dp_size == 0 else None
+    i_sh = NamedSharding(mesh, P(*((bax,) + (None,) * (in_rank - 1))))
+
+    def step(params, inputs):
+        return tfm.prefill(cfg, params, inputs, s_max, mesh)
+
+    step_jit = jax.jit(
+        step, in_shardings=(p_sh, i_sh), out_shardings=(None, c_sh)
+    )
+    return step_jit, {"params": p_sh, "cache": c_sh}

@@ -1,0 +1,88 @@
+"""SpGEMM application correctness cases (subprocess, 8 host devices)."""
+import os
+import sys
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+from repro.core import gen
+from repro.core.grid import make_grid
+from repro.sparse_apps.graph_algorithms import (
+    overlap_pairs,
+    overlap_pairs_reference,
+    triangle_count,
+    triangle_count_reference,
+)
+from repro.sparse_apps.mcl import MCLConfig, clusters_from_matrix, mcl_iterate
+
+
+def case_mcl_clusters_blocks():
+    """MCL on a 4-block stochastic block matrix must recover ~4 clusters."""
+    grid = make_grid(2, 2, 2)
+    n, blocks = 64, 4
+    a = gen.protein_similarity_like(n, blocks=blocks, intra_p=0.6, seed=3)
+    # column-normalize the input (MCL operates on a column-stochastic matrix)
+    nnz = int(a.nnz)
+    rows = np.asarray(a.rows[:nnz])
+    cols = np.asarray(a.cols[:nnz])
+    vals = np.asarray(a.vals[:nnz]).astype(np.float64)
+    from repro.sparse_apps.mcl import _col_normalize_np
+    from repro.core.sparse import from_numpy_coo
+
+    vals = _col_normalize_np(rows, cols, vals, n).astype(np.float32)
+    a = from_numpy_coo(rows, cols, vals, (n, n), cap=nnz)
+    final, hist = mcl_iterate(
+        a, grid, MCLConfig(max_iters=12, per_process_memory=1 << 24), verbose=True
+    )
+    nnz = int(final.nnz)
+    labels = clusters_from_matrix(
+        np.asarray(final.rows[:nnz]), np.asarray(final.cols[:nnz]), n
+    )
+    ncl = len(set(labels.tolist()))
+    assert 2 <= ncl <= 10, f"expected block-ish clustering, got {ncl} clusters"
+    # chaos decreased
+    assert hist[-1]["chaos"] < hist[0]["chaos"]
+    print(f"OK mcl_clusters_blocks (clusters={ncl}, iters={len(hist)})")
+
+
+def case_triangle_count_exact():
+    grid = make_grid(2, 2, 2)
+    a = gen.erdos_renyi(48, 6.0, seed=9)
+    # symmetrize
+    nnz = int(a.nnz)
+    rows = np.asarray(a.rows[:nnz])
+    cols = np.asarray(a.cols[:nnz])
+    from repro.core.sparse import from_numpy_coo
+
+    r2 = np.concatenate([rows, cols])
+    c2 = np.concatenate([cols, rows])
+    keep = r2 != c2
+    a = from_numpy_coo(r2[keep], c2[keep], np.ones(keep.sum(), np.float32),
+                       (48, 48))
+    got = triangle_count(a, grid)
+    want = triangle_count_reference(a)
+    assert got == want, (got, want)
+    print(f"OK triangle_count_exact (triangles={got})")
+
+
+def case_overlap_pairs_exact():
+    grid = make_grid(2, 2, 2)
+    a = gen.kmer_like(32, 64, 5, seed=17)
+    got = overlap_pairs(a, grid, min_shared=2)
+    want = overlap_pairs_reference(a, min_shared=2)
+    assert got == want, (len(got), len(want))
+    print(f"OK overlap_pairs_exact (pairs={len(got)})")
+
+
+CASES = {n[len("case_"):]: f for n, f in list(globals().items())
+         if n.startswith("case_")}
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else None
+    if which:
+        CASES[which]()
+    else:
+        for f in CASES.values():
+            f()

@@ -1,0 +1,83 @@
+"""Validate the loop-aware HLO cost model against hand-counted programs."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_analysis as ha
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+class TestDotFlops:
+    def test_single_matmul(self):
+        a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+        txt = _compile_text(lambda x, y: x @ y, a, b)
+        cost = ha.analyze_module(txt, world=1)
+        # 2*M*N*K = 2*64*32*128 = 524288
+        assert cost.flops == pytest.approx(524288, rel=0.01)
+
+    def test_scan_multiplies_by_trips(self):
+        L = 7
+        w = jax.ShapeDtypeStruct((L, 32, 32), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+
+        def fn(ws, x0):
+            def body(h, wi):
+                return h @ wi, None
+
+            h, _ = jax.lax.scan(body, x0, ws)
+            return h
+
+        txt = _compile_text(fn, w, x)
+        cost = ha.analyze_module(txt, world=1)
+        expect = L * 2 * 8 * 32 * 32
+        assert cost.flops == pytest.approx(expect, rel=0.05), (
+            cost.flops, expect, cost.loop_trips
+        )
+
+    def test_nested_scan(self):
+        Lo, Li = 3, 5
+        w = jax.ShapeDtypeStruct((Lo, Li, 16, 16), jnp.float32)
+        x = jax.ShapeDtypeStruct((4, 16), jnp.float32)
+
+        def fn(ws, x0):
+            def outer(h, wo):
+                def inner(h2, wi):
+                    return h2 @ wi, None
+
+                h2, _ = jax.lax.scan(inner, h, wo)
+                return h2, None
+
+            h, _ = jax.lax.scan(outer, x0, ws)
+            return h
+
+        txt = _compile_text(fn, w, x)
+        cost = ha.analyze_module(txt, world=1)
+        expect = Lo * Li * 2 * 4 * 16 * 16
+        assert cost.flops == pytest.approx(expect, rel=0.05), (
+            cost.flops, expect, cost.loop_trips
+        )
+
+
+class TestCollectives:
+    def test_psum_in_scan_counted_per_trip(self):
+        import os
+        if len(jax.devices()) < 2:
+            pytest.skip("needs >=2 devices")
+
+    def test_shape_bytes(self):
+        assert ha._shape_bytes("bf16[64,512]") == 64 * 512 * 2
+        assert ha._shape_bytes("(f32[8], f32[16])") == 4 * 8 + 4 * 16
+
+    def test_group_size_iota(self):
+        line = "x = f32[2] all-gather(y), replica_groups=[32,16]<=[512], dimensions={0}"
+        assert ha._group_size(line, 512) == 16
+
+    def test_group_size_explicit(self):
+        line = "x = f32[2] all-reduce(y), replica_groups={{0,1,2,3},{4,5,6,7}}"
+        assert ha._group_size(line, 8) == 4

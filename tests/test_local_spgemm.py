@@ -1,0 +1,220 @@
+"""Local SpGEMM kernels vs dense oracles — incl. semiring property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import local_spgemm as lsp
+from repro.core import semiring as sr
+from repro.core import sparse as sp
+
+
+def dense_random(rng, m, n, density):
+    x = rng.random((m, n)).astype(np.float32)
+    mask = rng.random((m, n)) < density
+    return np.where(mask, x + 0.1, 0.0).astype(np.float32)
+
+
+def make_pair(seed, m=10, k=12, n=9, da=0.3, db=0.3):
+    rng = np.random.default_rng(seed)
+    A = dense_random(rng, m, k, da)
+    B = dense_random(rng, k, n, db)
+    a = sp.from_dense(jnp.asarray(A), cap=m * k + 1)
+    b = sp.from_dense(jnp.asarray(B), cap=k * n + 1)
+    return A, B, a, b
+
+
+class TestSpMM:
+    def test_matches_dense(self):
+        A, B, a, _ = make_pair(0)
+        np.testing.assert_allclose(
+            np.asarray(lsp.spmm(a, jnp.asarray(B))), A @ B, rtol=1e-5
+        )
+
+    def test_min_plus(self):
+        # min-plus product on small graphs == shortest one-hop relaxation
+        A = np.array([[0.0, 1.0], [4.0, 0.0]], np.float32)
+        B = np.array([[2.0, 0.0], [1.0, 3.0]], np.float32)
+        a = sp.from_dense(jnp.asarray(A), cap=5)
+        out = np.asarray(lsp.spmm(a, jnp.asarray(B), sr.MIN_PLUS))
+        # only structural nonzeros of A participate: A[0,1]=1, A[1,0]=4
+        expect = np.array(
+            [[1 + 1, 1 + 3], [4 + 2, 4 + 0]], np.float32
+        )
+        np.testing.assert_allclose(out, expect)
+
+
+class TestDenseAcc:
+    def test_matches_dense(self):
+        A, B, a, b = make_pair(1)
+        np.testing.assert_allclose(
+            np.asarray(lsp.spgemm_dense_acc(a, b)), A @ B, rtol=1e-5
+        )
+
+    def test_rejects_min_plus(self):
+        _, _, a, b = make_pair(2)
+        with pytest.raises(ValueError):
+            lsp.spgemm_dense_acc(a, b, sr.MIN_PLUS)
+
+
+class TestESC:
+    def test_matches_dense(self):
+        A, B, a, b = make_pair(3)
+        c, ovf = lsp.spgemm_esc(a, b, out_cap=10 * 9 + 1, flops_cap=4000)
+        assert int(ovf) == 0
+        np.testing.assert_allclose(np.asarray(c.to_dense()), A @ B, rtol=1e-5)
+
+    def test_output_row_sorted(self):
+        _, _, a, b = make_pair(4)
+        c, _ = lsp.spgemm_esc(a, b, out_cap=200, flops_cap=4000)
+        nnz = int(c.nnz)
+        keys = np.asarray(c.rows[:nnz]) * c.shape[1] + np.asarray(c.cols[:nnz])
+        assert np.all(np.diff(keys) > 0)
+
+    def test_overflow_reported(self):
+        A, B, a, b = make_pair(5, da=0.6, db=0.6)
+        dense_nnz = int((A @ B != 0).sum())
+        c, ovf = lsp.spgemm_esc(a, b, out_cap=dense_nnz // 2, flops_cap=8000)
+        assert int(ovf) > 0
+
+    def test_flops_cap_overflow_reported(self):
+        _, _, a, b = make_pair(6, da=0.6, db=0.6)
+        c, ovf = lsp.spgemm_esc(a, b, out_cap=200, flops_cap=7)
+        assert int(ovf) > 0
+
+    def test_unsorted_inputs_ok(self):
+        """Paper §IV-D: local multiply must not require sorted inputs."""
+        A, B, a, b = make_pair(7)
+        rng = np.random.default_rng(0)
+        perm = rng.permutation(a.cap)
+        # permuting scatters padding among real entries -> declare all slots
+        # candidate (nnz=cap), then compact on the sentinel test to restore
+        # the valid-prefix invariant
+        a_shuf = sp.SparseCOO(
+            a.rows[perm], a.cols[perm], a.vals[perm], jnp.int32(a.cap), a.shape
+        )
+        a_shuf, _ = a_shuf.compact(a_shuf.rows < a.shape[0], new_cap=a.cap)
+        c, ovf = lsp.spgemm_esc(a_shuf, b, out_cap=200, flops_cap=4000)
+        assert int(ovf) == 0
+        np.testing.assert_allclose(np.asarray(c.to_dense()), A @ B, rtol=1e-5)
+
+    def test_min_plus_semiring(self):
+        INF = np.float32(1e9)
+        A = np.array([[0, 1, 0], [0, 0, 2], [3, 0, 0]], np.float32)
+        B = np.array([[0, 5, 0], [4, 0, 0], [0, 0, 6]], np.float32)
+        a = sp.from_dense(jnp.asarray(A), cap=10)
+        b = sp.from_dense(jnp.asarray(B), cap=10)
+        c, _ = lsp.spgemm_esc(a, b, out_cap=20, flops_cap=40, semiring=sr.MIN_PLUS)
+        # structural product: C[i,j] = min over k in A(i,:)∩B(:,j) of a+b
+        # A(0,1)=1, B(1,0)=4 -> C[0,0] = 5
+        d = np.asarray(c.to_dense())
+        assert d[0, 0] == 5.0
+
+    def test_plus_pair_counts_paths(self):
+        # triangle counting semiring: values are path counts
+        A = (np.ones((4, 4)) - np.eye(4)).astype(np.float32)
+        a = sp.from_dense(jnp.asarray(A), cap=20)
+        c, _ = lsp.spgemm_esc(a, a, out_cap=20, flops_cap=80, semiring=sr.PLUS_PAIR)
+        d = np.asarray(c.to_dense())
+        # number of 2-paths between distinct i,j in K4 = 2 (through the other 2)
+        assert d[0, 1] == 2.0 and d[0, 0] == 3.0
+
+
+class TestSymbolic:
+    def test_flops_exact(self):
+        A, B, a, b = make_pair(8)
+        expect = int(((A != 0).astype(np.int64).T.sum(1) * (B != 0).sum(1)).sum())
+        # flops = sum_k nnz(A(:,k)) * nnz(B(k,:))
+        expect = int(((A != 0).sum(0) * (B != 0).sum(1)).sum())
+        got = int(lsp.local_symbolic_flops(a, b))
+        assert got == expect
+
+    def test_exact_nnz(self):
+        A, B, a, b = make_pair(9)
+        expect = int(((A @ B) != 0).sum())
+        got = int(lsp.local_symbolic_exact(a, b, flops_cap=4000))
+        assert got == expect
+
+    def test_ordering_flops_geq_nnz(self):
+        _, _, a, b = make_pair(10, da=0.5, db=0.5)
+        fl = int(lsp.local_symbolic_flops(a, b))
+        ex = int(lsp.local_symbolic_exact(a, b, flops_cap=8000))
+        assert fl >= ex  # cf >= 1 (paper §II-A)
+
+    def test_nnz_per_col_upper(self):
+        A, B, a, b = make_pair(11)
+        cc = a.col_counts()
+        ub = np.asarray(lsp.nnz_per_col_upper(cc, b))
+        true_cols = ((A @ B) != 0).sum(0)
+        assert np.all(ub >= true_cols)
+        assert ub.sum() == int(lsp.local_symbolic_flops(a, b))
+
+
+class TestMerge:
+    def test_merge_sparse(self):
+        rng = np.random.default_rng(12)
+        xs = [dense_random(rng, 8, 8, 0.3) for _ in range(3)]
+        parts = [sp.from_dense(jnp.asarray(x), cap=30) for x in xs]
+        merged, ovf = lsp.merge_sparse(parts, out_cap=80)
+        assert int(ovf) == 0
+        np.testing.assert_allclose(
+            np.asarray(merged.to_dense()), sum(xs), rtol=1e-5
+        )
+
+    def test_merge_max_semiring(self):
+        xs = [np.diag(np.array([1, 5, 2], np.float32)),
+              np.diag(np.array([4, 2, 3], np.float32))]
+        parts = [sp.from_dense(jnp.asarray(x), cap=5) for x in xs]
+        merged, _ = lsp.merge_sparse(parts, out_cap=10, semiring=sr.MAX_TIMES)
+        np.testing.assert_allclose(
+            np.asarray(merged.to_dense()), np.maximum(*xs)
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    m=st.integers(2, 10),
+    k=st.integers(2, 10),
+    n=st.integers(2, 10),
+    da=st.floats(0.1, 0.7),
+    db=st.floats(0.1, 0.7),
+)
+def test_property_esc_equals_dense_acc_equals_dense(seed, m, k, n, da, db):
+    rng = np.random.default_rng(seed)
+    A = dense_random(rng, m, k, da)
+    B = dense_random(rng, k, n, db)
+    a = sp.from_dense(jnp.asarray(A), cap=m * k + 1)
+    b = sp.from_dense(jnp.asarray(B), cap=k * n + 1)
+    expect = A @ B
+    got_acc = np.asarray(lsp.spgemm_dense_acc(a, b))
+    np.testing.assert_allclose(got_acc, expect, rtol=1e-4, atol=1e-5)
+    c, ovf = lsp.spgemm_esc(a, b, out_cap=m * n + 1, flops_cap=m * k * n + 1)
+    assert int(ovf) == 0
+    np.testing.assert_allclose(np.asarray(c.to_dense()), expect, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_distributive_blocked_multiply(seed):
+    """C = A·B == Σ_k A[:,k-block]·B[k-block,:] — the layer-splitting identity
+    SUMMA3D relies on (paper Fig. 1: per-layer low-rank products merge to C)."""
+    rng = np.random.default_rng(seed)
+    m, k, n, l = 6, 8, 5, 2
+    A = dense_random(rng, m, k, 0.4)
+    B = dense_random(rng, k, n, 0.4)
+    a = sp.from_dense(jnp.asarray(A), cap=m * k + 1)
+    parts = []
+    w = k // l
+    for layer in range(l):
+        Ak = A[:, layer * w : (layer + 1) * w]
+        Bk = B[layer * w : (layer + 1) * w, :]
+        ak = sp.from_dense(jnp.asarray(Ak), cap=m * w + 1)
+        bk = sp.from_dense(jnp.asarray(Bk), cap=w * n + 1)
+        ck, ovf = lsp.spgemm_esc(ak, bk, out_cap=m * n + 1, flops_cap=m * w * n + 1)
+        assert int(ovf) == 0
+        parts.append(ck)
+    merged, ovf = lsp.merge_sparse(parts, out_cap=m * n + 1)
+    assert int(ovf) == 0
+    np.testing.assert_allclose(np.asarray(merged.to_dense()), A @ B, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,214 @@
+"""Unit + property tests for the fixed-capacity sparse core."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse as sp
+from repro.core import gen
+
+
+def dense_random(rng, m, n, density):
+    x = rng.random((m, n)).astype(np.float32)
+    mask = rng.random((m, n)) < density
+    return np.where(mask, x + 0.1, 0.0).astype(np.float32)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(42)
+
+
+class TestRoundtrip:
+    def test_from_to_dense(self, rng):
+        x = dense_random(rng, 13, 17, 0.2)
+        a = sp.from_dense(jnp.asarray(x), cap=300)
+        np.testing.assert_allclose(np.asarray(a.to_dense()), x, rtol=1e-6)
+
+    def test_from_numpy_coo_dedup(self):
+        rows = np.array([0, 0, 1, 2, 2])
+        cols = np.array([1, 1, 0, 2, 2])
+        vals = np.array([1.0, 2.0, 3.0, 4.0, 5.0], np.float32)
+        a = sp.from_numpy_coo(rows, cols, vals, (3, 3))
+        d = np.asarray(a.to_dense())
+        assert d[0, 1] == 3.0 and d[1, 0] == 3.0 and d[2, 2] == 9.0
+        assert int(a.nnz) == 3
+
+    def test_transpose(self, rng):
+        x = dense_random(rng, 7, 11, 0.3)
+        a = sp.from_dense(jnp.asarray(x), cap=100)
+        np.testing.assert_allclose(np.asarray(a.transpose().to_dense()), x.T)
+
+    def test_empty(self):
+        e = sp.empty((5, 6), cap=10)
+        assert np.asarray(e.to_dense()).sum() == 0
+        assert int(e.nnz) == 0
+
+
+class TestInvariants:
+    def test_sort_rowmajor_keeps_padding_last(self, rng):
+        x = dense_random(rng, 9, 9, 0.25)
+        a = sp.from_dense(jnp.asarray(x), cap=60).sort_rowmajor()
+        nnz = int(a.nnz)
+        assert np.all(np.asarray(a.rows[nnz:]) == 9)
+        r = np.asarray(a.rows[:nnz])
+        c = np.asarray(a.cols[:nnz])
+        keys = r * 9 + c
+        assert np.all(np.diff(keys) > 0)
+
+    def test_with_capacity_grow_shrink(self, rng):
+        x = dense_random(rng, 6, 6, 0.2)
+        a = sp.from_dense(jnp.asarray(x), cap=40)
+        big = a.with_capacity(80)
+        np.testing.assert_allclose(np.asarray(big.to_dense()), x)
+        small = big.sort_rowmajor().with_capacity(int(a.nnz))
+        np.testing.assert_allclose(np.asarray(small.to_dense()), x)
+
+    def test_compact_overflow_counts(self):
+        a = sp.from_dense(jnp.asarray(np.eye(8, dtype=np.float32)), cap=16)
+        kept, overflow = a.compact(a.rows < 8, new_cap=4)
+        assert int(kept.nnz) == 4
+        assert int(overflow) == 4
+
+
+class TestColumnOps:
+    def test_select_col_block(self, rng):
+        x = dense_random(rng, 10, 12, 0.4)
+        a = sp.from_dense(jnp.asarray(x), cap=80)
+        blk, ovf = a.select_col_block(4, 4, new_cap=80)
+        assert int(ovf) == 0
+        np.testing.assert_allclose(np.asarray(blk.to_dense()), x[:, 4:8])
+
+    def test_blockcyclic_partition_covers_all(self, rng):
+        # b=2 batches, l=2 layers, 8 columns -> blocks of width 2
+        x = dense_random(rng, 6, 8, 0.5)
+        a = sp.from_dense(jnp.asarray(x), cap=60)
+        b0, _ = a.select_cols_blockcyclic(0, 2, 2, new_cap=60)
+        b1, _ = a.select_cols_blockcyclic(1, 2, 2, new_cap=60)
+        # batch 0 gets blocks 0,2 -> cols 0,1,4,5 ; batch 1 gets 2,3,6,7
+        np.testing.assert_allclose(
+            np.asarray(b0.to_dense()), x[:, [0, 1, 4, 5]]
+        )
+        np.testing.assert_allclose(
+            np.asarray(b1.to_dense()), x[:, [2, 3, 6, 7]]
+        )
+
+    def test_counts(self, rng):
+        x = dense_random(rng, 15, 9, 0.3)
+        a = sp.from_dense(jnp.asarray(x), cap=100)
+        np.testing.assert_array_equal(
+            np.asarray(a.col_counts()), (x != 0).sum(0).astype(np.int32)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(a.row_counts()), (x != 0).sum(1).astype(np.int32)
+        )
+
+
+class TestCoalesceConcat:
+    def test_coalesce_sums_duplicates(self):
+        rows = jnp.array([2, 0, 2, 5, 5], jnp.int32)
+        cols = jnp.array([3, 1, 3, 5, 5], jnp.int32)
+        vals = jnp.array([1.0, 2.0, 3.0, 4.0, -4.0], jnp.float32)
+        a = sp.SparseCOO(rows, cols, vals, jnp.int32(5), (6, 6))
+        m, ovf = sp.coalesce(a, new_cap=8)
+        assert int(ovf) == 0
+        d = np.asarray(m.to_dense())
+        assert d[2, 3] == 4.0 and d[0, 1] == 2.0
+        # duplicates (5,5) with values 4 and -4 merge to an explicit zero entry
+        assert int(m.nnz) == 3
+
+    def test_concat_then_dense(self, rng):
+        x = dense_random(rng, 8, 8, 0.2)
+        y = dense_random(rng, 8, 8, 0.2)
+        a = sp.from_dense(jnp.asarray(x), cap=30)
+        b = sp.from_dense(jnp.asarray(y), cap=30)
+        c, ovf = sp.concat([a, b], new_cap=90)
+        assert int(ovf) == 0
+        merged, ovf2 = sp.coalesce(c, new_cap=90)
+        assert int(ovf2) == 0
+        np.testing.assert_allclose(np.asarray(merged.to_dense()), x + y, rtol=1e-6)
+
+    def test_hstack_remap(self, rng):
+        x = dense_random(rng, 5, 4, 0.5)
+        y = dense_random(rng, 5, 6, 0.5)
+        a = sp.from_dense(jnp.asarray(x), cap=30)
+        b = sp.from_dense(jnp.asarray(y), cap=40)
+        c, ovf = sp.hstack_remap([a, b], [4, 6], new_cap=70)
+        assert int(ovf) == 0
+        np.testing.assert_allclose(
+            np.asarray(c.to_dense()), np.concatenate([x, y], axis=1)
+        )
+
+
+class TestPruneScale:
+    def test_prune_threshold(self, rng):
+        x = dense_random(rng, 10, 10, 0.5)
+        a = sp.from_dense(jnp.asarray(x), cap=80)
+        pruned, _ = a.prune_threshold(0.5, new_cap=80)
+        expect = np.where(np.abs(x) >= 0.5, x, 0.0)
+        np.testing.assert_allclose(np.asarray(pruned.to_dense()), expect)
+
+    def test_scale_cols(self, rng):
+        x = dense_random(rng, 6, 4, 0.6)
+        s = np.arange(1, 5, dtype=np.float32)
+        a = sp.from_dense(jnp.asarray(x), cap=30)
+        np.testing.assert_allclose(
+            np.asarray(a.scale_cols(jnp.asarray(s)).to_dense()), x * s, rtol=1e-6
+        )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(2, 12),
+    n=st.integers(2, 12),
+    density=st.floats(0.05, 0.6),
+    seed=st.integers(0, 2**16),
+)
+def test_property_roundtrip_and_sort(m, n, density, seed):
+    rng = np.random.default_rng(seed)
+    x = dense_random(rng, m, n, density)
+    cap = m * n + 3
+    a = sp.from_dense(jnp.asarray(x), cap=cap)
+    np.testing.assert_allclose(np.asarray(a.to_dense()), x, rtol=1e-6)
+    for s in (a.sort_rowmajor(), a.sort_colmajor(), a.transpose().transpose()):
+        np.testing.assert_allclose(np.asarray(s.to_dense()), x, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), b=st.integers(1, 4))
+def test_property_blockcyclic_reassembles(seed, b):
+    """Block-cyclic batches, hstack'd back in order, reproduce the matrix
+    column set (possibly permuted) — and every column appears exactly once."""
+    rng = np.random.default_rng(seed)
+    l = 2
+    n = b * l * 3  # divisible width
+    x = dense_random(rng, 7, n, 0.4)
+    a = sp.from_dense(jnp.asarray(x), cap=7 * n + 1)
+    cols_seen = []
+    for i in range(b):
+        blk, ovf = a.select_cols_blockcyclic(i, b, l, new_cap=7 * n + 1)
+        assert int(ovf) == 0
+        w = n // (b * l)
+        blocks = [j for j in range(b * l) if j % b == i]
+        cols_seen += [blk for blkids in [blocks] for blk in blkids]
+        expect = np.concatenate([x[:, j * w : (j + 1) * w] for j in blocks], axis=1)
+        np.testing.assert_allclose(np.asarray(blk.to_dense()), expect)
+    assert sorted(cols_seen) == list(range(b * l))
+
+
+class TestGenerators:
+    def test_erdos_renyi_stats(self):
+        a = gen.erdos_renyi(100, 5.0, seed=1)
+        assert a.shape == (100, 100)
+        assert 350 <= int(a.nnz) <= 500  # dedup removes a few
+
+    def test_rmat_skew(self):
+        a = gen.rmat(scale=7, edge_factor=8, seed=1)
+        counts = np.asarray(a.row_counts())
+        assert counts.max() > 4 * max(counts.mean(), 1)  # power-law skew
+
+    def test_kmer_like_shape(self):
+        a = gen.kmer_like(50, 200, 4, seed=0)
+        assert a.shape == (50, 200)

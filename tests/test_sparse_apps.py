@@ -1,0 +1,26 @@
+"""Application-level tests (run distributed in a subprocess — 8 devices)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CASES = ["mcl_clusters_blocks", "triangle_count_exact", "overlap_pairs_exact"]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_app_case(case):
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        PYTHONPATH=os.path.join(REPO, "src"),
+        JAX_PLATFORMS="cpu",
+    )
+    r = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "app_cases.py"), case],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert r.returncode == 0, f"{case} failed:\n{r.stdout[-3000:]}\n{r.stderr[-3000:]}"
+    assert f"OK {case}" in r.stdout

@@ -1,0 +1,82 @@
+"""Tests for the batch-count math (paper Eq. 2 + Alg. 3 line 12)."""
+import pytest
+
+from repro.core import symbolic as sym
+
+
+class TestLowerBound:
+    def test_eq2_basic(self):
+        # mem(C)=100GB, M=60GB, inputs 10GB -> b >= ceil(100/50) = 2
+        b = sym.batch_count_lower_bound(
+            mem_c_bytes=100 << 30,
+            total_memory=60 << 30,
+            nnz_a=5 << 30,
+            nnz_b=5 << 30,
+            r=1,
+        )
+        assert b == 2
+
+    def test_fits_in_memory_one_batch(self):
+        b = sym.batch_count_lower_bound(1 << 20, 1 << 30, 100, 100, r=12)
+        assert b == 1
+
+    def test_inputs_exceed_memory_raises(self):
+        with pytest.raises(MemoryError):
+            sym.batch_count_lower_bound(1, 100, 10, 10, r=12)
+
+
+class TestAlg3BatchCount:
+    def test_line12(self):
+        # M/p = 1000B, r=10, maxA=20, maxB=30 -> denom = 1000-500=500
+        # maxC=200 -> b = ceil(2000/500) = 4
+        b = sym.batch_count(200, 20, 30, per_process_memory=1000, r=10)
+        assert b == 4
+
+    def test_robust_to_imbalance_monotone(self):
+        # larger max unmerged nnz (more imbalance) -> never fewer batches
+        bs = [
+            sym.batch_count(c, 10, 10, per_process_memory=10_000, r=12)
+            for c in (100, 500, 2500, 12500)
+        ]
+        assert bs == sorted(bs)
+
+    def test_alg3_geq_eq2_under_balance(self):
+        """With perfectly balanced distribution the Alg-3 count >= Eq-2 bound
+        (paper: symbolic estimates MORE batches for imbalanced cases)."""
+        p = 16
+        nnz_a = nnz_b = 1_000_000
+        unmerged_total = 50_000_000
+        M = 30_000_000  # bytes, r=1
+        r = 1
+        eq2 = sym.batch_count_lower_bound(unmerged_total, M, nnz_a, nnz_b, r=r)
+        alg3 = sym.batch_count(
+            unmerged_total // p, nnz_a // p, nnz_b // p, per_process_memory=M // p, r=r
+        )
+        assert alg3 >= eq2
+
+    def test_imbalance_increases_b(self):
+        p_mem = 10_000
+        balanced = sym.batch_count(1000, 10, 10, p_mem, r=4)
+        imbalanced = sym.batch_count(3000, 10, 10, p_mem, r=4)  # hot process
+        assert imbalanced > balanced
+
+
+class TestPlanColumns:
+    def test_divisible_passthrough(self):
+        assert sym.batching_plan_columns(64, 4, 2) == 4
+
+    def test_rounds_up(self):
+        assert sym.batching_plan_columns(60, 4, 3) == 4  # 60 % 12 == 0
+        assert sym.batching_plan_columns(64, 3, 2) == 4  # 3 -> 4 (64 % 8 == 0)
+
+    def test_symbolic_result_capacity(self):
+        res = sym.SymbolicResult(
+            num_batches=4,
+            max_unmerged_nnz=1000,
+            max_nnz_a=10,
+            max_nnz_b=10,
+            flops=5000,
+            lower_bound=2,
+        )
+        assert res.per_batch_capacity(slack=1.0) == 250
+        assert res.per_batch_capacity() >= 250
