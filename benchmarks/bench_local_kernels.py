@@ -1,34 +1,164 @@
 """Paper Table VII / Fig. 15 — local multiply + merge kernel comparison.
 
 The paper compares 'previous' (sorted heap) against 'now' (sort-free hash).
-Our TPU adaptation compares:
-  * sorted-merge baseline (coalesce on row-major-sorted inputs — plays the
-    'heap/sorted' role: sortedness maintained throughout)
-  * sort-free ESC (inputs unsorted; one sort at compress — the paper's
-    observation, §IV-D)
-  * dense-accumulator SpMM path (identity-hash accumulation — the paper's
-    hash table, TPU-native)
+Our TPU adaptation compares, per hot-path op:
+
+  * ESC coalesce — legacy two-key ``lexsort`` vs the packed-key engine
+    (single-key sort, and the sort-free bucket scan where the key space
+    allows it; see ``repro.core.sortkeys``).
+  * Merge-Fiber — unsorted lexsort-merge vs packed engines vs the segmented
+    k-way merge that exploits already-sorted fiber pieces (merge, don't
+    re-sort).
+  * Paired SpGEMM — O(capA×capB) pairing grid vs the k-binned grid
+    (``repro.kernels.spgemm_binned``), with the pairing-work counts that the
+    symbolic bin plan bounds.
+
 CPU wall times are NOT TPU predictions; the comparison shape (relative cost
-of keeping intermediates sorted vs sort-free) is the reproduced claim.
+of keeping intermediates sorted / pairing everything against everything vs
+the binned + packed-key engines) is the reproduced claim. ``run_local_suite``
+emits machine-readable rows for BENCH_local_kernels.json (op, variant,
+wall_ms, achieved gflops) so the perf trajectory is tracked PR over PR.
 """
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import gen
 from repro.core import local_spgemm as lsp
+from repro.core import semiring as sr
 from repro.core import sparse as sp
+from repro.core import symbolic as sym
+from repro.kernels import ops
+from repro.kernels.spgemm_binned import pairing_counts
 
 from .common import emit, time_jit
 
 
+def _note(rows_out, **row):
+    """Collect a JSON row when a collector is supplied (CSV-only runs pass
+    ``None`` and keep just the emit() side effects)."""
+    if rows_out is not None:
+        rows_out.append(row)
+
+
+def _expanded_workload(n, flops_cap, seed=0, valid_p=0.85):
+    """An ESC-expansion-shaped entry list: flops_cap slots, duplicate-heavy
+    coordinates over an (n, n) tile, a tail of invalid slots."""
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.integers(0, n, flops_cap).astype(np.int32))
+    cols = jnp.asarray(rng.integers(0, n, flops_cap).astype(np.int32))
+    valid = jnp.asarray(rng.random(flops_cap) < valid_p)
+    vals = jnp.asarray((rng.random(flops_cap) + 0.1).astype(np.float32))
+    x = sp.SparseCOO(rows, cols, vals, jnp.int32(flops_cap), (n, n))
+    return x, valid
+
+
+def bench_coalesce(rows_out=None, n=512, flops_cap=1 << 17, out_cap=1 << 16):
+    """ESC coalesce micro-benchmark: the acceptance comparison (packed vs
+    lexsort) plus the individual engines."""
+    x, valid = _expanded_workload(n, flops_cap)
+    times = {}
+    for eng in ("lexsort", "packed", "bucket", "auto"):
+        fn = jax.jit(
+            lambda xx, vv, e=eng: lsp._coalesce_semiring(
+                xx, vv, out_cap, sr.PLUS_TIMES, engine=e
+            )[0].vals
+        )
+        times[eng] = time_jit(fn, x, valid)
+        _note(rows_out, **dict(
+            op="esc_coalesce", variant=eng, wall_ms=times[eng] / 1e3,
+            gflops=flops_cap / times[eng] / 1e3,  # one reduce op per slot
+            entries=flops_cap,
+        ))
+        emit(f"tableVII/esc_coalesce_{eng}", times[eng], f"n={n}")
+    speed = times["lexsort"] / max(times["auto"], 1)
+    _note(rows_out, **dict(
+        op="esc_coalesce", variant="speedup_packed_vs_lexsort",
+        wall_ms=0.0, gflops=0.0, speedup=speed,
+    ))
+    emit("tableVII/esc_coalesce_speedup", 0.0, f"{speed:.2f}x")
+    return speed
+
+
+def bench_merge(rows_out=None, n=512, layers=4, part_cap=1 << 14, out_cap=1 << 16):
+    """Merge-Fiber micro-benchmark: engines + the segmented sorted merge."""
+    parts = [
+        gen.erdos_renyi(n, part_cap / n, seed=10 + i, cap=part_cap).sort_rowmajor()
+        for i in range(layers)
+    ]
+    total = layers * part_cap
+    times = {}
+    cases = {
+        "lexsort": dict(engine="lexsort"),
+        "packed": dict(engine="packed"),
+        "bucket": dict(engine="bucket"),
+        "auto": dict(engine="auto"),
+        "segmented_sorted": dict(assume_sorted=True),
+    }
+    for name, kwargs in cases.items():
+        fn = jax.jit(
+            lambda *ps, kw=kwargs: lsp.merge_sparse(
+                list(ps), out_cap, sr.PLUS_TIMES, **kw
+            )[0].vals
+        )
+        times[name] = time_jit(fn, *parts)
+        _note(rows_out, **dict(
+            op="merge_fiber", variant=name, wall_ms=times[name] / 1e3,
+            gflops=total / times[name] / 1e3, entries=total, layers=layers,
+        ))
+        emit(f"tableVII/merge_fiber_{name}", times[name], f"l={layers}")
+    speed = times["lexsort"] / max(times["auto"], 1)
+    _note(rows_out, **dict(
+        op="merge_fiber", variant="speedup_packed_vs_lexsort",
+        wall_ms=0.0, gflops=0.0, speedup=speed,
+    ))
+    emit("tableVII/merge_fiber_speedup", 0.0, f"{speed:.2f}x")
+    return speed
+
+
+def bench_binned_pairing(rows_out=None, scale=7, edge_factor=8):
+    """Paired SpGEMM: unbinned O(capA×capB) vs the k-binned plan on a
+    skewed-k (R-MAT) workload — the regime binning targets."""
+    a = gen.rmat(scale=scale, edge_factor=edge_factor, seed=3)
+    b = gen.rmat(scale=scale, edge_factor=edge_factor, seed=4)
+    plan = sym.plan_k_bins(
+        np.asarray(a.col_counts()), np.asarray(b.row_counts()), a.cap, b.cap
+    )
+    pc = pairing_counts(a.cap, b.cap, plan.num_bins, plan.bin_cap_a,
+                        plan.bin_cap_b)
+    t_full = time_jit(lambda x, y: ops.spgemm_paired(x, y), a, b)
+    bm = jnp.asarray(plan.bin_of_k)
+    t_bin = time_jit(
+        lambda x, y, z: ops.spgemm_paired_binned(
+            x, y, plan.num_bins, plan.bin_cap_a, plan.bin_cap_b, bin_map=z
+        )[0],
+        a, b, bm,
+    )
+    _note(rows_out, **dict(
+        op="paired_spgemm", variant="unbinned", wall_ms=t_full / 1e3,
+        gflops=2 * pc["pairings_unbinned"] / t_full / 1e3,
+        pairings=pc["pairings_unbinned"],
+    ))
+    _note(rows_out, **dict(
+        op="paired_spgemm", variant="binned", wall_ms=t_bin / 1e3,
+        gflops=2 * pc["pairings_binned"] / t_bin / 1e3,
+        pairings=pc["pairings_binned"], num_bins=plan.num_bins,
+        pairing_reduction=pc["reduction"],
+    ))
+    emit("tableVII/paired_unbinned", t_full,
+         f"pairings={pc['pairings_unbinned']}")
+    emit("tableVII/paired_binned", t_bin,
+         f"pairings={pc['pairings_binned']} ({pc['reduction']:.1f}x fewer)")
+    return pc["reduction"]
+
+
 def run(n: int = 256, nnz_per_row: int = 8, layers: int = 4) -> None:
+    """CSV suite (paper Table VII shape) — kept for ``benchmarks.run`` all."""
     a = gen.erdos_renyi(n, nnz_per_row, seed=1)
     b = gen.erdos_renyi(n, nnz_per_row, seed=2)
     flops_cap = 1 << 17
     out_cap = 1 << 16
-
-    import jax
 
     # --- local multiply: ESC (sort-free) vs dense-accumulator
     esc = jax.jit(lambda x, y: lsp.spgemm_esc(x, y, out_cap, flops_cap)[0].vals)
@@ -60,3 +190,22 @@ def run(n: int = 256, nnz_per_row: int = 8, layers: int = 4) -> None:
     emit("tableVII/merge_sorted_baseline", t_sorted, f"l={layers}")
     emit("tableVII/merge_sortfree", t_free,
          f"l={layers} speedup={t_sorted / max(t_free, 1):.2f}x")
+
+    bench_coalesce()
+    bench_merge()
+    bench_binned_pairing()
+
+
+def run_local_suite() -> list:
+    """The ``--suite local`` entry: returns JSON-ready rows (op, variant,
+    wall_ms, gflops, extras)."""
+    rows = []
+    coal = bench_coalesce(rows)
+    merg = bench_merge(rows)
+    red = bench_binned_pairing(rows)
+    rows.append(dict(
+        op="summary", variant="acceptance",
+        wall_ms=0.0, gflops=0.0,
+        coalesce_speedup=coal, merge_speedup=merg, pairing_reduction=red,
+    ))
+    return rows

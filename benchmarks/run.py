@@ -7,12 +7,22 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.
+``--suite all`` (default) prints ``name,us_per_call,derived`` CSV across every
+table/figure module. ``--suite local`` runs the local-kernel hot-path suite
+(packed-key sort engine + k-binned pairing) and writes
+``BENCH_local_kernels.json`` at the repo root — op, variant, wall-ms, achieved
+GFLOP/s per row — so the perf trajectory is tracked from PR to PR.
 """
+import argparse
+import json
+import pathlib
+import platform
 import sys
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 
-def main() -> None:
+
+def run_all() -> None:
     from . import (
         bench_comm_model,
         bench_layers_batches,
@@ -31,6 +41,38 @@ def main() -> None:
     bench_scaling.run()         # Fig. 6/7/9 (alpha-beta projection)
     bench_mcl.run()             # Fig. 3 (HipMCL end-to-end)
     bench_roofline.run()        # EXPERIMENTS.md section Roofline feed
+
+
+def run_local(json_path: pathlib.Path) -> None:
+    import jax
+
+    from . import bench_local_kernels
+
+    print("name,us_per_call,derived")
+    rows = bench_local_kernels.run_local_suite()
+    payload = {
+        "suite": "local_kernels",
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "rows": rows,
+    }
+    json_path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {json_path}", file=sys.stderr)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--suite", choices=("all", "local"), default="all")
+    ap.add_argument(
+        "--json-out",
+        default=str(REPO_ROOT / "BENCH_local_kernels.json"),
+        help="output path for --suite local",
+    )
+    args = ap.parse_args()
+    if args.suite == "local":
+        run_local(pathlib.Path(args.json_out))
+    else:
+        run_all()
 
 
 if __name__ == "__main__":

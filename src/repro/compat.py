@@ -1,0 +1,122 @@
+"""Version-compat shims for JAX sharding APIs.
+
+The repo targets the newest jax sharding surface (``jax.sharding.AxisType``,
+``jax.set_mesh``, ``jax.shard_map`` with ``check_vma``), but must also run on
+older installs (0.4.x) where those names live elsewhere or don't exist:
+
+  * ``AxisType``      — stub enum when ``jax.sharding.AxisType`` is missing
+                        (old meshes have no axis types; the stub lets call
+                        sites pass ``axis_types=(AxisType.Auto,) * n``
+                        unconditionally).
+  * ``make_mesh``     — builds a Mesh from a device ndarray *or* a shape
+                        tuple, dropping ``axis_types`` when unsupported.
+  * ``set_mesh``      — context manager: ``jax.set_mesh`` on new jax, the
+                        legacy ``with mesh:`` resource-env manager otherwise.
+  * ``shard_map``     — ``jax.shard_map`` / ``jax.experimental.shard_map``,
+                        translating ``check_vma`` <-> ``check_rep``.
+
+Every file that touches these APIs imports them from here, never from jax
+directly — that is what keeps tier-1 collection working across jax versions.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+# --------------------------------------------------------------------- AxisType
+try:
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPE = True
+except ImportError:  # jax < 0.5: meshes have no axis types
+    import enum
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPE = False
+
+
+# --------------------------------------------------------------------- make_mesh
+def _mesh_accepts_axis_types() -> bool:
+    try:
+        return "axis_types" in inspect.signature(jax.sharding.Mesh.__init__).parameters
+    except (ValueError, TypeError):
+        # old Mesh has a (*args, **kwargs) __init__ wrapper; probe the class
+        return HAS_AXIS_TYPE
+
+
+_MESH_AXIS_TYPES = _mesh_accepts_axis_types()
+
+
+def make_mesh(devices_or_shape, axis_names, axis_types=None) -> jax.sharding.Mesh:
+    """Mesh from a device ndarray or a shape tuple; drops unsupported kwargs."""
+    if isinstance(devices_or_shape, tuple) and all(
+        isinstance(d, int) for d in devices_or_shape
+    ):
+        if hasattr(jax, "make_mesh"):
+            if axis_types is not None and HAS_AXIS_TYPE:
+                try:
+                    return jax.make_mesh(
+                        devices_or_shape, axis_names, axis_types=axis_types
+                    )
+                except TypeError:
+                    pass
+            return jax.make_mesh(devices_or_shape, axis_names)
+        # jax < 0.4.35: no jax.make_mesh — build the device grid ourselves
+        from jax.experimental import mesh_utils
+
+        devices_or_shape = mesh_utils.create_device_mesh(devices_or_shape)
+    if axis_types is not None and _MESH_AXIS_TYPES and HAS_AXIS_TYPE:
+        try:
+            return jax.sharding.Mesh(devices_or_shape, axis_names, axis_types=axis_types)
+        except TypeError:
+            pass
+    return jax.sharding.Mesh(devices_or_shape, axis_names)
+
+
+# --------------------------------------------------------------------- set_mesh
+def set_mesh(mesh: jax.sharding.Mesh):
+    """``with set_mesh(mesh): ...`` — ambient mesh on any jax version."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    # legacy: Mesh is itself a context manager entering the resource env
+    return mesh
+
+
+# --------------------------------------------------------------------- axis_size
+def axis_size(axis_name) -> int:
+    """``lax.axis_size`` (new jax) or a psum-of-ones fallback (old jax).
+
+    Must be called under a collective context (shard_map body). The fallback
+    is a replicated constant so XLA folds it — no real collective is issued.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+# --------------------------------------------------------------------- shard_map
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+else:  # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SM_PARAMS = set(inspect.signature(_shard_map_impl).parameters)
+_CHECK_KW = (
+    "check_vma" if "check_vma" in _SM_PARAMS
+    else ("check_rep" if "check_rep" in _SM_PARAMS else None)
+)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma=None):
+    """jax.shard_map with the replication-check kwarg spelled per-version."""
+    kwargs = {}
+    if check_vma is not None and _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )

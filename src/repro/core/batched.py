@@ -34,6 +34,7 @@ import numpy as np
 from jax import lax
 
 from . import semiring as sr
+from ..compat import shard_map
 from .distsparse import DistSparse
 from .grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from .summa3d import BatchCaps, _squeeze_tile, summa3d_dense_step, summa3d_sparse_step
@@ -43,7 +44,8 @@ from .symbolic import batch_count, batch_count_lower_bound, batching_plan_column
 # the batch index is a traced scalar so all batches share one executable.
 _dense_jit = jax.jit(summa3d_dense_step, static_argnames=("grid", "semiring"))
 _sparse_jit = jax.jit(
-    summa3d_sparse_step, static_argnames=("grid", "caps", "semiring")
+    summa3d_sparse_step,
+    static_argnames=("grid", "caps", "semiring", "sorted_merge"),
 )
 
 Array = jnp.ndarray
@@ -107,7 +109,7 @@ def symbolic3d(a: DistSparse, b: DistSparse, grid: Grid) -> np.ndarray:
                    shape=b.shape, tile_shape=b.tile_shape,
                    grid_shape=b.grid_shape, kind=b.kind),
     )
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         step, mesh=grid.mesh, in_specs=in_specs, out_specs=spec3,
         check_vma=False,
     ))
@@ -252,11 +254,14 @@ def batched_summa3d(
     slack: float = 1.3,
     max_retries: int = 4,
     force_num_batches: Optional[int] = None,
+    sorted_merge: bool = True,
 ) -> BatchedResult:
     """Multiply A·B in batches; the consumer sees each batch then it's freed.
 
     consumer(batch_idx, c_batch, global_col_map) -> anything; c_batch is a
     DistSparse (path="sparse") or stacked dense tiles (path="dense").
+    ``sorted_merge`` selects the segmented (merge-not-sort) Merge-Fiber in
+    the per-batch sparse step.
     """
     plan = plan_batches(
         a, b, grid, per_process_memory, r_bytes=r_bytes, slack=slack,
@@ -288,7 +293,8 @@ def batched_summa3d(
                 ok = True
                 break
             c_batch, ovf = _sparse_jit(
-                a, b_sel, grid=grid, caps=cur_caps, semiring=semiring
+                a, b_sel, grid=grid, caps=cur_caps, semiring=semiring,
+                sorted_merge=sorted_merge,
             )
             if int(ovf) == 0:
                 ok = True
@@ -334,7 +340,7 @@ def _select_batch_jit(b: DistSparse, grid: Grid, batch, num_batches: int, l: int
                    grid_shape=b.grid_shape, kind=b.kind),
         spec0,
     )
-    fn = jax.shard_map(
+    fn = shard_map(
         step, mesh=grid.mesh, in_specs=in_specs,
         out_specs=(spec3, spec3, spec3, spec3, spec0),
         check_vma=False,

@@ -15,7 +15,9 @@ import math
 from typing import Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..compat import AxisType, make_mesh as _make_mesh
 
 ROW_AX, COL_AX, LAYER_AX = "gr", "gc", "gl"
 
@@ -53,7 +55,7 @@ def make_grid(pr: int, pc: int, l: int, devices: Optional[Sequence] = None) -> G
     import numpy as np
 
     dev_array = np.asarray(devices[:ndev]).reshape(pr, pc, l)
-    mesh = jax.sharding.Mesh(
+    mesh = _make_mesh(
         dev_array,
         (ROW_AX, COL_AX, LAYER_AX),
         axis_types=(AxisType.Auto,) * 3,
@@ -87,7 +89,7 @@ def grid_from_mesh(
         dev = mesh.devices.transpose(perm)
     else:
         dev = mesh.devices.transpose(perm)[..., None]
-    new_mesh = jax.sharding.Mesh(
+    new_mesh = _make_mesh(
         dev, (ROW_AX, COL_AX, LAYER_AX), axis_types=(AxisType.Auto,) * 3
     )
     return Grid(new_mesh, pr, pc, l)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from . import semiring as sr
+from . import sortkeys
 from .sparse import SparseCOO, empty
 
 Array = jnp.ndarray
@@ -58,7 +59,13 @@ def spmm(a: SparseCOO, b_dense: Array, semiring: sr.Semiring = sr.PLUS_TIMES) ->
 # Dense-accumulator SpGEMM: sparse × sparse -> dense block
 # ---------------------------------------------------------------------------
 def spgemm_dense_acc(
-    a: SparseCOO, b: SparseCOO, semiring: sr.Semiring = sr.PLUS_TIMES
+    a: SparseCOO,
+    b: SparseCOO,
+    semiring: sr.Semiring = sr.PLUS_TIMES,
+    *,
+    out_cap: int = None,
+    flops_cap: int = None,
+    return_overflow: bool = False,
 ) -> Array:
     """C = A·B with a dense (m × n_b) accumulator.
 
@@ -66,18 +73,38 @@ def spgemm_dense_acc(
     column block (n_b = n/(b·grid)), so the dense accumulator is small. B is
     scattered to dense once (its nnz is small per batch), then a single SpMM
     streams A's nonzeros through the accumulator.
+
+    min/max semirings can't use a 0-initialized dense B (structural zeros
+    would participate), so they route through ``spgemm_esc`` and densify the
+    sparse result onto a ``semiring.zero`` background. ``out_cap``/``flops_cap``
+    bound that fallback's static capacities. The defaults (m*n_b and
+    cap_A*cap_B) are hard upper bounds — overflow is impossible with them.
+    Callers passing *tighter* symbolic-step caps must set
+    ``return_overflow=True`` (returns ``(dense, overflow)``) and check it,
+    as a beaten estimate silently drops contributions otherwise (§IV-A
+    retry discipline). For sum semirings overflow is always 0 (the dense
+    accumulator cannot overflow).
     """
     m, k = a.shape
     k2, nb = b.shape
     assert k == k2, (a.shape, b.shape)
     if semiring.add_kind == "sum":
         b_dense = b.to_dense()
-        return spmm(a, b_dense, semiring)
-    # min/max semirings can't use a 0-initialized dense B (0 entries would
-    # participate); fall back to ESC for those.
-    raise ValueError(
-        f"dense-accumulator path requires sum-monoid semiring, got {semiring.name}"
+        out = spmm(a, b_dense, semiring)
+        return (out, jnp.int32(0)) if return_overflow else out
+    out_cap = out_cap if out_cap is not None else m * nb
+    flops_cap = flops_cap if flops_cap is not None else max(a.cap * b.cap, 1)
+    c, overflow = spgemm_esc(
+        a, b, out_cap=out_cap, flops_cap=flops_cap, semiring=semiring
     )
+    dense = jnp.full((m + 1, nb + 1), semiring.zero, c.vals.dtype)
+    safe_vals = jnp.where(c.valid_mask(), c.vals, semiring.zero)
+    if semiring.add_kind == "min":
+        dense = dense.at[c.rows, c.cols].min(safe_vals)
+    else:
+        dense = dense.at[c.rows, c.cols].max(safe_vals)
+    out = dense[:m, :nb]
+    return (out, overflow) if return_overflow else out
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +163,7 @@ def spgemm_esc(
     flops_cap: int,
     semiring: sr.Semiring = sr.PLUS_TIMES,
     a_is_colsorted: bool = False,
+    engine: str = "auto",
 ) -> Tuple[SparseCOO, Array]:
     """Sparse × sparse → sparse via expand–sort–compress.
 
@@ -155,65 +183,73 @@ def spgemm_esc(
     flop_overflow = jnp.maximum(total - flops_cap, 0)
 
     expanded = SparseCOO(rows, cols, vals, jnp.int32(flops_cap), (m, n))
-    # coalesce = sort + segment-reduce (the single sort of the whole pipeline)
-    merged, overflow = _coalesce_semiring(expanded, valid, out_cap, semiring)
+    # compress: packed-key engine (bucket scan / single-key sort — the one
+    # ordering step of the whole pipeline; see repro.core.sortkeys)
+    merged, overflow = _coalesce_semiring(expanded, valid, out_cap, semiring, engine)
     return merged, overflow + flop_overflow
 
 
 def _coalesce_semiring(
-    x: SparseCOO, valid: Array, new_cap: int, semiring: sr.Semiring
+    x: SparseCOO, valid: Array, new_cap: int, semiring: sr.Semiring,
+    engine: str = "auto",
 ):
-    """coalesce() generalized over semirings; `valid` marks live entries."""
+    """coalesce() generalized over semirings; `valid` marks live entries.
+
+    Dispatches to the packed-key engine (``repro.core.sortkeys``): sort-free
+    bucket scan for small key spaces, single-key packed sort otherwise,
+    ``engine="lexsort"`` for the seed's two-key reference path.
+    """
     m, n = x.shape
-    # push invalid entries to the end by sentinel keys, then sort row-major
-    rows = jnp.where(valid, x.rows, m)
-    cols = jnp.where(valid, x.cols, n)
-    order = jnp.lexsort((cols, rows))
-    rows, cols = rows[order], cols[order]
-    vals = x.vals[order]
-    vmask = rows < m
-    new_key = jnp.ones((x.cap,), dtype=bool)
-    if x.cap > 1:
-        same = (rows[1:] == rows[:-1]) & (cols[1:] == cols[:-1])
-        new_key = new_key.at[1:].set(~same)
-    new_key = new_key & vmask
-    seg = jnp.cumsum(new_key.astype(jnp.int32)) - 1
-    total = jnp.maximum(seg[-1] + 1, 0)
-    seg = jnp.where(vmask & (seg < new_cap), seg, new_cap)
-    out_rows = jnp.full((new_cap + 1,), m, jnp.int32).at[seg].min(rows)[:new_cap]
-    out_cols = jnp.full((new_cap + 1,), n, jnp.int32).at[seg].min(cols)[:new_cap]
-    if semiring.add_kind == "sum":
-        buf = jnp.zeros((new_cap + 1,), vals.dtype).at[seg].add(vals)
-    elif semiring.add_kind == "min":
-        buf = jnp.full((new_cap + 1,), jnp.inf, vals.dtype).at[seg].min(vals)
-    else:  # max
-        buf = jnp.full((new_cap + 1,), -jnp.inf, vals.dtype).at[seg].max(vals)
-    out_vals = buf[:new_cap]
-    nnz = jnp.minimum(total, new_cap).astype(jnp.int32)
-    pad = jnp.arange(new_cap) >= nnz
-    out_rows = jnp.where(pad, m, out_rows)
-    out_cols = jnp.where(pad, n, out_cols)
-    out_vals = jnp.where(pad, 0, out_vals).astype(x.vals.dtype)
-    overflow = (total - nnz).astype(jnp.int32)
-    return SparseCOO(out_rows, out_cols, out_vals, nnz, (m, n)), overflow
+    rows, cols, vals, nnz, overflow = sortkeys.coalesce_entries(
+        x.rows, x.cols, x.vals, valid, (m, n), new_cap,
+        add_kind=semiring.add_kind, engine=engine,
+    )
+    return SparseCOO(rows, cols, vals, nnz, (m, n)), overflow
 
 
-def merge_sparse(parts, out_cap: int, semiring: sr.Semiring = sr.PLUS_TIMES):
+def merge_sparse(
+    parts,
+    out_cap: int,
+    semiring: sr.Semiring = sr.PLUS_TIMES,
+    assume_sorted: bool = False,
+    engine: str = "auto",
+):
     """Merge-Layer / Merge-Fiber for the sparse path: sum duplicate coords.
 
-    Paper §IV-D hash-merge, TPU-adapted as one sort + segment-reduce over the
-    concatenated (unsorted!) entry lists — inputs stay unsorted, only the
-    merged result is sorted.
+    Paper §IV-D hash-merge, TPU-adapted. Two regimes:
+
+      * ``assume_sorted=False`` — inputs unsorted; one packed-key coalesce
+        over the concatenated entry lists (bucket scan or single-key sort).
+      * ``assume_sorted=True`` — every part is already row-major sorted (true
+        for ESC outputs and their column-split pieces, i.e. exactly what
+        Merge-Fiber receives), so the parts are *merged*, not re-sorted: a
+        segmented k-way merge-path over packed keys (ceil(log2 l) rank/scatter
+        rounds), then a linear compress. No sort anywhere.
+
+    Returns (merged, overflow).
     """
     shape = parts[0].shape
     for x in parts:
         assert x.shape == shape
+    m, n = shape
+    if assume_sorted and engine != "lexsort" and sortkeys.fits_i32(m, n):
+        # padding carries (m, n) sentinels == max key, so each part's packed
+        # key array is ascending end-to-end and merges keep sentinels last
+        keys = [sortkeys.pack_rowmajor(x.rows, x.cols, n) for x in parts]
+        vals = [x.vals for x in parts]
+        mkey, mvals = sortkeys.merge_sorted_runs(keys, vals)
+        sent = jnp.int32(sortkeys.key_space(m, n) - 1)
+        okey, ovals, nnz, overflow = sortkeys.compress_sorted_keys(
+            mkey, mvals, sent, out_cap, add_kind=semiring.add_kind
+        )
+        orows, ocols = sortkeys.unpack_rowmajor(okey, n)
+        return SparseCOO(orows, ocols, ovals, nnz, (m, n)), overflow
     rows = jnp.concatenate([x.rows for x in parts])
     cols = jnp.concatenate([x.cols for x in parts])
     vals = jnp.concatenate([x.vals for x in parts])
     valid = jnp.concatenate([x.valid_mask() for x in parts])
     stacked = SparseCOO(rows, cols, vals, jnp.int32(rows.shape[0]), shape)
-    return _coalesce_semiring(stacked, valid, out_cap, semiring)
+    return _coalesce_semiring(stacked, valid, out_cap, semiring, engine)
 
 
 # ---------------------------------------------------------------------------
@@ -230,23 +266,21 @@ def local_symbolic_flops(a: SparseCOO, b: SparseCOO) -> Array:
     return jnp.sum(jnp.where(b.valid_mask(), ccount_pad[b.rows], 0))
 
 
-def local_symbolic_exact(a: SparseCOO, b: SparseCOO, flops_cap: int) -> Array:
-    """Exact nnz(A·B) via a boolean ESC without forming values (structure only)."""
+def local_symbolic_exact(
+    a: SparseCOO, b: SparseCOO, flops_cap: int, engine: str = "auto"
+) -> Array:
+    """Exact nnz(A·B) via a boolean ESC without forming values (structure only).
+
+    The distinct-coordinate count runs on the packed-key engine: the bucket
+    scan needs no sort at all, the packed fallback sorts one bare key array
+    (no payload) — either way, never a two-key lexsort.
+    """
     m, _ = a.shape
     _, n = b.shape
     a_csc = a.sort_colmajor()
     bt = b.transpose()
     rows, cols, _, valid, total = _expand(a_csc, bt, flops_cap, sr.PLUS_TIMES)
-    rows = jnp.where(valid, rows, m)
-    cols = jnp.where(valid, cols, n)
-    order = jnp.lexsort((cols, rows))
-    rows, cols = rows[order], cols[order]
-    vmask = rows < m
-    new_key = jnp.ones((flops_cap,), dtype=bool)
-    if flops_cap > 1:
-        same = (rows[1:] == rows[:-1]) & (cols[1:] == cols[:-1])
-        new_key = new_key.at[1:].set(~same)
-    return jnp.sum(new_key & vmask).astype(jnp.int32)
+    return sortkeys.count_unique(rows, cols, valid, (m, n), engine=engine)
 
 
 def nnz_per_col_upper(a_colcounts: Array, b: SparseCOO) -> Array:

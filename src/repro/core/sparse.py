@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import sortkeys
+
 Array = jnp.ndarray
 
 
@@ -67,15 +69,33 @@ class SparseCOO:
         return SparseCOO(self.cols, self.rows, self.vals, self.nnz, (n, m))
 
     # ------------------------------------------------------------- reordering
-    def sort_rowmajor(self) -> "SparseCOO":
-        """Sort entries by (row, col). Padding (sentinels) sorts to the end."""
+    def sort_rowmajor(self, engine: str = "auto") -> "SparseCOO":
+        """Sort entries by (row, col). Padding (sentinels) sorts to the end.
+
+        ``engine="auto"`` packs (row, col) into one monotonic i32 key and runs
+        a single-key ``lax.sort`` (stable — bit-identical to the lexsort path);
+        ``"lexsort"`` forces the seed's two-key path (parity reference, and
+        the fallback when the packed key would overflow i32).
+        """
+        m, n = self.shape
+        if engine != "lexsort" and sortkeys.fits_i32(m, n):
+            key = sortkeys.pack_rowmajor(self.rows, self.cols, n)
+            key, vals = jax.lax.sort((key, self.vals), num_keys=1)
+            rows, cols = sortkeys.unpack_rowmajor(key, n)
+            return SparseCOO(rows, cols, vals, self.nnz, self.shape)
         order = jnp.lexsort((self.cols, self.rows))
         return SparseCOO(
             self.rows[order], self.cols[order], self.vals[order], self.nnz, self.shape
         )
 
-    def sort_colmajor(self) -> "SparseCOO":
+    def sort_colmajor(self, engine: str = "auto") -> "SparseCOO":
         """Sort entries by (col, row) — CSC-like ordering used by local SpGEMM."""
+        m, n = self.shape
+        if engine != "lexsort" and sortkeys.fits_i32(m, n):
+            key = sortkeys.pack_colmajor(self.rows, self.cols, m)
+            key, vals = jax.lax.sort((key, self.vals), num_keys=1)
+            rows, cols = sortkeys.unpack_colmajor(key, m)
+            return SparseCOO(rows, cols, vals, self.nnz, self.shape)
         order = jnp.lexsort((self.rows, self.cols))
         return SparseCOO(
             self.rows[order], self.cols[order], self.vals[order], self.nnz, self.shape
@@ -235,36 +255,20 @@ def from_numpy_coo(
     return SparseCOO(jnp.asarray(pr), jnp.asarray(pc), jnp.asarray(pv), jnp.int32(nnz), (m, n))
 
 
-def coalesce(a: SparseCOO, new_cap: int):
+def coalesce(a: SparseCOO, new_cap: int, engine: str = "auto"):
     """Merge duplicate (row, col) entries by summation; output row-major sorted.
 
     This is the 'compress' of ESC and the core of the paper's Merge steps for
-    the sparse path. Returns (merged, overflow count).
+    the sparse path. Returns (merged, overflow count). ``engine`` selects the
+    packed-key sort/compress path (see ``repro.core.sortkeys``): "auto" uses
+    the sort-free bucket scan for small key spaces, a single-key packed sort
+    otherwise, and "lexsort" pins the seed's two-key reference path.
     """
     m, n = a.shape
-    s = a.sort_rowmajor()
-    valid = s.valid_mask()
-    # boundary where a new (row, col) key starts
-    new_key = jnp.ones((a.cap,), dtype=bool)
-    if a.cap > 1:
-        same = (s.rows[1:] == s.rows[:-1]) & (s.cols[1:] == s.cols[:-1])
-        new_key = new_key.at[1:].set(~same)
-    new_key = new_key & valid
-    seg = jnp.cumsum(new_key.astype(jnp.int32)) - 1  # output slot per entry
-    total = jnp.maximum(seg[-1] + 1, 0)
-    seg = jnp.where(valid & (seg < new_cap), seg, new_cap)
-    rows = jnp.full((new_cap + 1,), m, jnp.int32).at[seg].min(s.rows)[:new_cap]
-    cols = jnp.full((new_cap + 1,), n, jnp.int32).at[seg].min(s.cols)[:new_cap]
-    vals = jnp.zeros((new_cap + 1,), s.vals.dtype).at[seg].add(
-        jnp.where(seg < new_cap, s.vals, 0)
-    )[:new_cap]
-    nnz = jnp.minimum(total, new_cap).astype(jnp.int32)
-    # restore sentinels in padding
-    pad = jnp.arange(new_cap) >= nnz
-    rows = jnp.where(pad, m, rows)
-    cols = jnp.where(pad, n, cols)
-    vals = jnp.where(pad, 0, vals)
-    overflow = (total - nnz).astype(jnp.int32)
+    rows, cols, vals, nnz, overflow = sortkeys.coalesce_entries(
+        a.rows, a.cols, a.vals, a.valid_mask(), (m, n), new_cap,
+        add_kind="sum", engine=engine,
+    )
     return SparseCOO(rows, cols, vals, nnz, (m, n)), overflow
 
 

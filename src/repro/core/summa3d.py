@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from . import semiring as sr
+from ..compat import axis_size, shard_map
 from .distsparse import DistSparse
 from .grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from .local_spgemm import spgemm_esc, spmm, merge_sparse
@@ -70,7 +71,7 @@ def _gather_A(a: SparseCOO) -> SparseCOO:
     to the per-layer contraction space (stage s occupies [s*wl, (s+1)*wl))."""
     tm, wl = a.shape
     s = lax.axis_index(COL_AX)
-    pc = lax.axis_size(COL_AX)
+    pc = axis_size(COL_AX)
     k_tot = pc * wl
     valid = a.valid_mask()
     rows = jnp.where(valid, a.rows, tm)
@@ -89,7 +90,7 @@ def _gather_B(b: SparseCOO) -> SparseCOO:
     to the per-layer contraction space (stage i occupies [i*wl, (i+1)*wl))."""
     wl, tn = b.shape
     i = lax.axis_index(ROW_AX)
-    pr = lax.axis_size(ROW_AX)
+    pr = axis_size(ROW_AX)
     k_tot = pr * wl
     valid = b.valid_mask()
     rows = jnp.where(valid, b.rows + i * wl, k_tot)
@@ -220,7 +221,7 @@ def summa3d_dense_step(
                    shape=b_batch.shape, tile_shape=b_batch.tile_shape,
                    grid_shape=b_batch.grid_shape, kind=b_batch.kind),
     )
-    fn = jax.shard_map(
+    fn = shard_map(
         step, mesh=grid.mesh, in_specs=in_specs, out_specs=spec3,
         check_vma=False,
     )
@@ -233,6 +234,7 @@ def summa3d_dense_step(
 def summa3d_sparse_step(
     a: DistSparse, b_batch: DistSparse, grid: Grid, caps: BatchCaps,
     semiring: sr.Semiring = sr.PLUS_TIMES,
+    sorted_merge: bool = True,
 ) -> Tuple[DistSparse, Array]:
     """One batched-SUMMA3D step, sparse path. Returns (C tiles, overflow).
 
@@ -240,6 +242,10 @@ def summa3d_sparse_step(
     global column mapping is block-cyclic (see batched.batch_column_map).
     overflow > 0 means a static capacity was exceeded — the driver retries
     with the next larger capacity plan (paper robustness, §IV-A).
+
+    ``sorted_merge=True`` runs Merge-Fiber as a segmented k-way merge: the l
+    received pieces are column splits of row-major-sorted ESC outputs, so
+    they arrive sorted and only need merging, never re-sorting (§IV-D).
     """
     tm_a, _ = a.tile_shape
     _, tn_b = b_batch.tile_shape
@@ -280,7 +286,9 @@ def summa3d_sparse_step(
             SparseCOO(pr_[k], pc_[k], pv_[k], pn_[k], (tm_a, piece_w))
             for k in range(l)
         ]
-        c_tile, ovf_merge = merge_sparse(parts, caps.c_cap, semiring)
+        c_tile, ovf_merge = merge_sparse(
+            parts, caps.c_cap, semiring, assume_sorted=sorted_merge
+        )
         ovf = ovf_mul + ovf_split + ovf_merge
         ovf_global = lax.pmax(lax.pmax(lax.pmax(ovf, ROW_AX), COL_AX), LAYER_AX)
         return (
@@ -301,7 +309,7 @@ def summa3d_sparse_step(
                    shape=b_batch.shape, tile_shape=b_batch.tile_shape,
                    grid_shape=b_batch.grid_shape, kind=b_batch.kind),
     )
-    fn = jax.shard_map(
+    fn = shard_map(
         step, mesh=grid.mesh, in_specs=in_specs,
         out_specs=(spec3, spec3, spec3, spec3, spec0),
         check_vma=False,

@@ -107,6 +107,87 @@ def batching_plan_columns(n: int, num_batches: int, num_layers: int) -> int:
     return b
 
 
+@dataclasses.dataclass(frozen=True)
+class KBinPlan:
+    """Host-side plan for the k-binned paired kernel (all python ints).
+
+    Sizes the static per-bin capacities of ``repro.kernels.spgemm_binned``
+    from the *exact* per-k entry counts (``SparseCOO.col_counts`` of A /
+    ``row_counts`` of B) — the same lightweight count vectors the distributed
+    symbolic step already moves (§IV-A), reused here to bound pairing work.
+    """
+
+    num_bins: int
+    bin_cap_a: int
+    bin_cap_b: int
+    pairings: int  # num_bins * bin_cap_a * bin_cap_b (block-rounded upstream)
+    pairings_unbinned: int  # cap_a * cap_b
+    bin_of_k: np.ndarray  # monotone i32[k_dim] map k -> bin
+
+
+def plan_k_bins(
+    a_col_counts: np.ndarray,
+    b_row_counts: np.ndarray,
+    cap_a: int,
+    cap_b: int,
+    candidates=(1, 2, 4, 8, 16, 32, 64),
+    slack: float = 1.0,
+) -> KBinPlan:
+    """Pick bin boundaries + count minimizing Σ_g capA_g × capB_g (host math).
+
+    For each candidate G two boundary families are scored and the cheaper
+    wins: equal-width k-ranges (bin(k) = k*G // k_dim) and quantile-balanced
+    ranges that cut the *combined* count mass (a+b) into equal slices — the
+    latter is what absorbs skewed-k (R-MAT-like) distributions where a few k
+    values carry most entries. Capacities are maxima over bins of the exact
+    counts (so ``slack=1.0`` cannot overflow). On a distribution concentrated
+    in a single k no boundary helps and the planner falls back to G=1 —
+    binning never hurts correctness, only the pairing bound.
+    """
+    a_cnt = np.asarray(a_col_counts, dtype=np.int64)
+    b_cnt = np.asarray(b_row_counts, dtype=np.int64)
+    k_dim = a_cnt.shape[0]
+    assert b_cnt.shape[0] == k_dim, (a_cnt.shape, b_cnt.shape)
+
+    def score(bin_of_k, g):
+        binned_a = np.zeros(g, np.int64)
+        binned_b = np.zeros(g, np.int64)
+        np.add.at(binned_a, bin_of_k, a_cnt)
+        np.add.at(binned_b, bin_of_k, b_cnt)
+        ca = _rup8(max(int(binned_a.max() * slack), 8))
+        cb = _rup8(max(int(binned_b.max() * slack), 8))
+        return g * ca * cb, ca, cb
+
+    weight = a_cnt + b_cnt
+    cumw = np.cumsum(weight)
+    total = max(int(cumw[-1]), 1)
+    best = None
+    for g in candidates:
+        if g > k_dim:
+            break
+        equal = (np.arange(k_dim, dtype=np.int64) * g) // k_dim
+        # balanced: cut the cumulative (a+b) mass into g equal slices; the
+        # inclusive prefix keeps the map monotone and in [0, g)
+        balanced = np.minimum((cumw - weight) * g // total, g - 1)
+        for bin_of_k in (equal, balanced):
+            cost, ca, cb = score(bin_of_k, g)
+            if best is None or cost < best[0]:
+                best = (cost, g, ca, cb, bin_of_k.astype(np.int32))
+    cost, g, ca, cb, bin_of_k = best
+    return KBinPlan(
+        num_bins=g,
+        bin_cap_a=ca,
+        bin_cap_b=cb,
+        pairings=cost,
+        pairings_unbinned=cap_a * cap_b,
+        bin_of_k=bin_of_k,
+    )
+
+
+def _rup8(x: int) -> int:
+    return ((x + 7) // 8) * 8
+
+
 def estimate_mem_c_bytes(flops: int, compression_factor: float, r: int) -> int:
     """mem(C) = r * Σ_k nnz(D^k); bounded by r*flops (no merging, worst case)
     and approximated by r*flops/cf_layer when layer-level merging is counted."""

@@ -1,12 +1,26 @@
 """Pallas TPU kernels for the paper's compute hot-spots (§IV-D), with
 pure-jnp oracles (ref.py) and jit'd wrappers (ops.py).
 
-  spmm.py        sparse × dense   (MoE dispatch; dense-accumulator SpGEMM)
-  spgemm_acc.py  COO × COO → dense tile (sort-free paired SpGEMM, the paper's
-                 hash-SpGEMM adapted to the MXU/VMEM)
-  densify.py     COO → dense tile scatter
+  spmm.py          sparse × dense   (MoE dispatch; dense-accumulator SpGEMM)
+  spgemm_acc.py    COO × COO → dense tile (sort-free paired SpGEMM, the
+                   paper's hash-SpGEMM adapted to the MXU/VMEM)
+  spgemm_binned.py k-binned paired SpGEMM: counting-sort both operands by
+                   contraction range, pair only matching k-bins —
+                   O(Σ_g capA_g×capB_g) pairings instead of O(capA×capB)
+                   (Nagasaka-style binning, arXiv:1804.01698)
+  sort_engine.py   in-VMEM bitonic sort of packed (row,col)-key/value pairs —
+                   the on-chip sort primitive behind the packed-key
+                   sort/compress engine in ``repro.core.sortkeys``
+  densify.py       COO → dense tile scatter
 
-See DESIGN.md §3 for the CPU-hash → TPU-dense-accumulator adaptation story.
+See DESIGN.md §3 for the CPU-hash → TPU-dense-accumulator adaptation story;
+``repro.core.sortkeys`` documents the packed-key encoding and engine policy.
 """
 from . import ops, ref  # noqa: F401
-from .ops import densify, spgemm_paired, spmm  # noqa: F401
+from .ops import (  # noqa: F401
+    densify,
+    sort_pairs,
+    spgemm_paired,
+    spgemm_paired_binned,
+    spmm,
+)

@@ -21,7 +21,9 @@ import jax.numpy as jnp
 from ..core.sparse import SparseCOO
 from . import ref
 from .densify import densify_pallas
+from .sort_engine import sort_pairs as _sort_pairs
 from .spgemm_acc import spgemm_paired_pallas
+from .spgemm_binned import bin_entries_by_k, spgemm_paired_binned_pallas
 from .spmm import spmm_pallas
 
 _ON_TPU = jax.default_backend() == "tpu"
@@ -63,3 +65,57 @@ def densify(a: SparseCOO, use_pallas: bool = False,
     if use_pallas:
         return densify_pallas(a.rows, a.cols, vals, m, n, interpret=interpret)
     return ref.densify_ref(a.rows, a.cols, vals, m, n)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("num_bins", "bin_cap_a", "bin_cap_b", "use_pallas", "interpret"),
+)
+def spgemm_paired_binned(
+    a: SparseCOO,
+    b: SparseCOO,
+    num_bins: int,
+    bin_cap_a: int,
+    bin_cap_b: int,
+    bin_map: jnp.ndarray = None,
+    use_pallas: bool = False,
+    interpret: bool = not _ON_TPU,
+):
+    """k-binned paired SpGEMM: bucket both operands by contraction range, pair
+    only matching k-bins — O(Σ_g capA_g×capB_g) instead of O(capA×capB).
+
+    Static bin parameters (and the monotone ``bin_map`` absorbing skewed-k
+    distributions) come from ``repro.core.symbolic.plan_k_bins``. Returns
+    (C dense f32, overflow) — overflow > 0 means a bin capacity was exceeded
+    and entries were dropped (caller re-plans with bigger caps).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    av = jnp.where(a.valid_mask(), a.vals, 0)
+    bv = jnp.where(b.valid_mask(), b.vals, 0)
+    ak_b, ar_b, av_b, ovf_a = bin_entries_by_k(
+        a.cols, a.rows, av, a.valid_mask(), k, num_bins, bin_cap_a,
+        fill_k=-1, fill_other=m, bin_map=bin_map,
+    )
+    bk_b, bc_b, bv_b, ovf_b = bin_entries_by_k(
+        b.rows, b.cols, bv, b.valid_mask(), k, num_bins, bin_cap_b,
+        fill_k=-2, fill_other=n, bin_map=bin_map,
+    )
+    if use_pallas:
+        out = spgemm_paired_binned_pallas(
+            ar_b, ak_b, av_b, bk_b, bc_b, bv_b, m, n, interpret=interpret
+        )
+    else:
+        out = ref.spgemm_paired_binned_ref(
+            ar_b, ak_b, av_b, bk_b, bc_b, bv_b, m, n
+        )
+    return out, ovf_a + ovf_b
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def sort_pairs(keys: jnp.ndarray, vals: jnp.ndarray, use_pallas: bool = False,
+               interpret: bool = not _ON_TPU):
+    """Single-key sort carrying one payload — the packed-key engine's sort
+    primitive (bitonic VMEM network under Pallas, ``lax.sort`` otherwise)."""
+    return _sort_pairs(keys, vals, use_pallas=use_pallas, interpret=interpret)

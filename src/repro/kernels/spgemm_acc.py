@@ -18,7 +18,12 @@ Per (m-tile i, n-tile j) output block, reducing over A blocks s and B blocks t:
 
 Work is O(capA × capB) pairings per output tile — the narrow output blocks
 produced by batching (Alg. 4) keep capB small, which is what makes this
-profitable; the ESC path covers the wide/unbatched regime.
+profitable; the ESC path covers the wide/unbatched regime. When entries
+spread over the contraction index, ``spgemm_binned.py`` cuts the pairing
+work to O(Σ_k capA_k × capB_k) by bucketing both operands by k-range first
+and pairing only matching bins — use ``repro.core.symbolic.plan_k_bins`` to
+size the bins and prefer the binned kernel whenever its planned pairing
+count is lower.
 """
 from __future__ import annotations
 

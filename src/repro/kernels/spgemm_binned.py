@@ -1,0 +1,188 @@
+"""Pallas TPU kernel: k-binned paired SpGEMM — COO × COO → dense C.
+
+The base paired kernel (``spgemm_acc.py``) forms the match matrix for *every*
+(A-entry, B-entry) block pair: O(capA × capB) MXU pairings regardless of how
+entries distribute over the contraction index k. Following Nagasaka et al.'s
+binning insight (arXiv:1804.01698: bucket work by contraction structure before
+accumulating), this kernel first distributes both operands into ``num_bins``
+equal-width k-ranges with an XLA-side counting sort, then pairs **only
+matching k-bins**:
+
+    pairings drop from  capA × capB  to  Σ_g capA_g × capB_g
+                                        (≤ num_bins × binA_cap × binB_cap)
+
+Entries in different bins can never satisfy ``a_k == b_k``, so the skipped
+pairings are exactly the structurally-impossible ones. Bin capacities are
+static (JAX shapes): the host planner ``repro.core.symbolic.plan_k_bins``
+sizes them from the exact per-k counts (``col_counts``) the symbolic step
+already computes, and ``bin_entries_by_k`` reports an overflow count if the
+caller's caps were beaten (paper §IV-A robustness discipline).
+
+Padding sentinels match ``spgemm_acc.py``: A pads k with -1, B with -2 (never
+equal), values with 0.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCKS = dict(m_blk=128, n_blk=128, a_blk=256, b_blk=256)
+
+
+# ---------------------------------------------------------------------------
+# XLA-side binning (counting sort by k-range)
+# ---------------------------------------------------------------------------
+def bin_entries_by_k(
+    k_idx, other, vals, valid, k_dim: int, num_bins: int, bin_cap: int,
+    *, fill_k: int, fill_other: int, bin_map=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Distribute COO entries into ``num_bins`` k-ranges.
+
+    ``bin_map`` is a monotone i32[k_dim] map k → bin (quantile-balanced
+    boundaries from ``plan_k_bins`` absorb skewed-k distributions); when None,
+    equal-width ranges ``k * num_bins // k_dim`` are used. Returns
+    (k_binned, other_binned, vals_binned, overflow), the first three of shape
+    (num_bins, bin_cap) with sentinel-filled padding. Entries beyond a bin's
+    capacity are dropped and counted in ``overflow`` (caller re-plans).
+    """
+    cap = k_idx.shape[0]
+    if bin_map is None:
+        bucket = jnp.where(valid, k_idx * num_bins // k_dim, num_bins)
+    else:
+        bin_map_pad = jnp.concatenate(
+            [bin_map.astype(jnp.int32), jnp.full((1,), num_bins, jnp.int32)]
+        )
+        bucket = jnp.where(
+            valid, bin_map_pad[jnp.clip(k_idx, 0, k_dim)], num_bins
+        )
+    # stable counting sort: order by bucket, carrying the entry payloads
+    bucket_s, k_s, o_s, v_s = jax.lax.sort(
+        (bucket.astype(jnp.int32), k_idx, other, vals), num_keys=1
+    )
+    counts = jnp.zeros((num_bins + 1,), jnp.int32).at[bucket].add(1)[:num_bins]
+    starts = jnp.cumsum(counts) - counts  # exclusive prefix per bin
+    bclip = jnp.clip(bucket_s, 0, num_bins - 1)
+    within = jnp.arange(cap, dtype=jnp.int32) - starts[bclip]
+    ok = (bucket_s < num_bins) & (within < bin_cap)
+    dest = jnp.where(ok, bclip * bin_cap + within, num_bins * bin_cap)
+    flat = num_bins * bin_cap
+    kb = jnp.full((flat + 1,), fill_k, jnp.int32).at[dest].set(
+        jnp.where(ok, k_s, fill_k)
+    )[:flat]
+    ob = jnp.full((flat + 1,), fill_other, jnp.int32).at[dest].set(
+        jnp.where(ok, o_s, fill_other)
+    )[:flat]
+    vb = jnp.zeros((flat + 1,), vals.dtype).at[dest].set(
+        jnp.where(ok, v_s, 0)
+    )[:flat]
+    overflow = jnp.sum(jnp.maximum(counts - bin_cap, 0)).astype(jnp.int32)
+    shape2 = (num_bins, bin_cap)
+    return kb.reshape(shape2), ob.reshape(shape2), vb.reshape(shape2), overflow
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel: pair only same-bin blocks
+# ---------------------------------------------------------------------------
+def _binned_kernel(
+    ar_ref, ak_ref, av_ref, bk_ref, bc_ref, bv_ref, out_ref, *, m_blk, n_blk
+):
+    g = pl.program_id(2)
+    s = pl.program_id(3)
+    t = pl.program_id(4)
+
+    @pl.when((g == 0) & (s == 0) & (t == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ar, ak, av = ar_ref[0, :], ak_ref[0, :], av_ref[0, :].astype(jnp.float32)
+    bk, bc, bv = bk_ref[0, :], bc_ref[0, :], bv_ref[0, :].astype(jnp.float32)
+    nbA, nbB = ar.shape[0], bk.shape[0]
+    m_off = pl.program_id(0) * m_blk
+    n_off = pl.program_id(1) * n_blk
+
+    match = (ak[:, None] == bk[None, :]).astype(jnp.float32)
+    w = av[:, None] * bv[None, :] * match  # (nbA, nbB)
+    rowsel = (ar[None, :] - m_off == jax.lax.broadcasted_iota(
+        jnp.int32, (m_blk, nbA), 0
+    )).astype(jnp.float32)
+    colsel = (bc[:, None] - n_off == jax.lax.broadcasted_iota(
+        jnp.int32, (nbB, n_blk), 1
+    )).astype(jnp.float32)
+    acc = jnp.dot(rowsel, w, preferred_element_type=jnp.float32)
+    out_ref[...] += jnp.dot(acc, colsel, preferred_element_type=jnp.float32)
+
+
+def spgemm_paired_binned_pallas(
+    a_rows, a_k, a_vals, b_k, b_cols, b_vals, m: int, n: int,
+    *, m_blk=None, n_blk=None, a_blk=None, b_blk=None, interpret: bool = True,
+) -> jnp.ndarray:
+    """Dense C (m×n, f32) from k-binned COO entry lists of shape
+    (num_bins, bin_cap*) — outputs of ``bin_entries_by_k``."""
+    G, binA = a_rows.shape
+    G2, binB = b_k.shape
+    assert G == G2, (a_rows.shape, b_k.shape)
+    m_blk = min(m_blk or DEFAULT_BLOCKS["m_blk"], _rup(m, 8))
+    n_blk = min(n_blk or DEFAULT_BLOCKS["n_blk"], _rup(n, 128))
+    a_blk = min(a_blk or DEFAULT_BLOCKS["a_blk"], _rup(binA, 8))
+    b_blk = min(b_blk or DEFAULT_BLOCKS["b_blk"], _rup(binB, 8))
+
+    m_pad, n_pad = _rup(m, m_blk), _rup(n, n_blk)
+    binA_pad, binB_pad = _rup(binA, a_blk), _rup(binB, b_blk)
+    a_rows = _pad2(a_rows, binA_pad, m_pad)
+    a_k = _pad2(a_k, binA_pad, -1)
+    a_vals = _pad2(a_vals, binA_pad, 0)
+    b_k = _pad2(b_k, binB_pad, -2)
+    b_cols = _pad2(b_cols, binB_pad, n_pad)
+    b_vals = _pad2(b_vals, binB_pad, 0)
+
+    grid = (
+        m_pad // m_blk, n_pad // n_blk, G, binA_pad // a_blk, binB_pad // b_blk
+    )
+    out = pl.pallas_call(
+        functools.partial(_binned_kernel, m_blk=m_blk, n_blk=n_blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, a_blk), lambda i, j, g, s, t: (g, s)),
+            pl.BlockSpec((1, a_blk), lambda i, j, g, s, t: (g, s)),
+            pl.BlockSpec((1, a_blk), lambda i, j, g, s, t: (g, s)),
+            pl.BlockSpec((1, b_blk), lambda i, j, g, s, t: (g, t)),
+            pl.BlockSpec((1, b_blk), lambda i, j, g, s, t: (g, t)),
+            pl.BlockSpec((1, b_blk), lambda i, j, g, s, t: (g, t)),
+        ],
+        out_specs=pl.BlockSpec((m_blk, n_blk), lambda i, j, g, s, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(a_rows, a_k, a_vals, b_k, b_cols, b_vals)
+    return out[:m, :n]
+
+
+def pairing_counts(
+    cap_a: int, cap_b: int, num_bins: int, bin_cap_a: int, bin_cap_b: int
+) -> dict:
+    """Static pairing-work comparison: unbinned O(capA×capB) grid vs the
+    binned Σ_g capA_g×capB_g grid (both rounded to kernel block multiples)."""
+    a_blk = min(DEFAULT_BLOCKS["a_blk"], _rup(cap_a, 8))
+    b_blk = min(DEFAULT_BLOCKS["b_blk"], _rup(cap_b, 8))
+    full = _rup(cap_a, a_blk) * _rup(cap_b, b_blk)
+    a_blk_g = min(DEFAULT_BLOCKS["a_blk"], _rup(bin_cap_a, 8))
+    b_blk_g = min(DEFAULT_BLOCKS["b_blk"], _rup(bin_cap_b, 8))
+    binned = num_bins * _rup(bin_cap_a, a_blk_g) * _rup(bin_cap_b, b_blk_g)
+    return {
+        "pairings_unbinned": full,
+        "pairings_binned": binned,
+        "reduction": full / max(binned, 1),
+    }
+
+
+def _rup(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _pad2(x, new_cols, fill):
+    return jnp.pad(
+        x, ((0, 0), (0, new_cols - x.shape[1])), constant_values=fill
+    )

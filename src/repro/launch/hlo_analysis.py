@@ -183,12 +183,28 @@ def _parse_computations(hlo_text: str):
         res_shape = _first_shape(rhs.split("(")[0])  # type precedes the op
         if name_m and res_shape:
             symbols[name_m.group(1)] = res_shape
-        # --- dot flops (operand shapes via the symbol table)
+        # --- dot flops (operand shapes via the symbol table; older jax HLO
+        # prints operand types inline — `dot(f32[64,128]{1,0} %x, ...)` — so
+        # accept an optional type token before each operand name and prefer
+        # the inline shape when present)
         if re.search(r"\bdot\(", rhs):
-            op_m = re.search(r"\bdot\(%?([\w\.\-]+)(?:,\s*%?([\w\.\-]+))?", rhs)
+            op_m = re.search(
+                r"\bdot\("
+                r"(?:(\w+\[[\d,]*\])(?:\{[^}]*\})?\s+)?%?([\w\.\-]+)"
+                r"(?:,\s*(?:(\w+\[[\d,]*\])(?:\{[^}]*\})?\s+)?%?([\w\.\-]+))?",
+                rhs,
+            )
             cd = _DOT_CDIMS.search(rhs)
-            lhs_shape = symbols.get(op_m.group(1)) if op_m else None
-            rhs_shape = symbols.get(op_m.group(2)) if (op_m and op_m.group(2)) else None
+            lhs_shape = rhs_shape = None
+            if op_m:
+                lhs_shape = (
+                    _first_shape(op_m.group(1)) if op_m.group(1)
+                    else symbols.get(op_m.group(2))
+                )
+                rhs_shape = (
+                    _first_shape(op_m.group(3)) if op_m.group(3)
+                    else symbols.get(op_m.group(4)) if op_m.group(4) else None
+                )
             if res_shape and lhs_shape and cd:
                 k = 1
                 for d in cd.group(1).split(","):

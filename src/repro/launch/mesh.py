@@ -5,8 +5,9 @@ never touch jax device state (the dry-run sets XLA_FLAGS before first init).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+import jax  # noqa: F401 — kept for device queries by callers
+
+from ..compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,16 +19,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
     """Small host-device mesh for tests/examples (needs XLA host-device flag)."""
     if pod:
-        return jax.make_mesh(
+        return make_mesh(
             (pod, data, model), ("pod", "data", "model"),
             axis_types=(AxisType.Auto,) * 3,
         )
-    return jax.make_mesh(
+    return make_mesh(
         (data, model), ("data", "model"), axis_types=(AxisType.Auto,) * 2
     )

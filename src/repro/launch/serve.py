@@ -19,7 +19,7 @@ def main() -> int:
 
     import numpy as np
     import jax
-    from jax.sharding import AxisType
+    from ..compat import AxisType, make_mesh, set_mesh
 
     from ..configs import get_config
     from ..models import transformer as tfm
@@ -28,9 +28,9 @@ def main() -> int:
     cfg = get_config(args.arch, smoke=args.smoke)
     ndev = len(jax.devices())
     model = 2 if ndev >= 2 else 1
-    mesh = jax.make_mesh((max(ndev // model, 1), model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = make_mesh((max(ndev // model, 1), model), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+    with set_mesh(mesh):
         params = tfm.init_params(cfg, jax.random.PRNGKey(0))
         eng = ServeEngine(cfg, params, mesh,
                           EngineConfig(max_batch=args.max_batch, s_max=args.s_max))

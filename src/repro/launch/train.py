@@ -40,7 +40,7 @@ def main() -> int:
 
     import jax
     import numpy as np
-    from jax.sharding import AxisType
+    from ..compat import AxisType, make_mesh, set_mesh
 
     from ..configs import get_config
     from ..data import DataConfig, Prefetcher, synthetic_batch
@@ -58,12 +58,12 @@ def main() -> int:
         mesh = make_production_mesh(multi_pod=True)
     elif args.mesh == "auto":
         model = 2 if ndev >= 4 else 1
-        mesh = jax.make_mesh((ndev // model, model), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh((ndev // model, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
     else:
         d, m = (int(v) for v in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh((d, m), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
     print(f"arch={cfg.arch_id} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
 
     seq = args.seq or (128 if args.smoke else 4096)
@@ -81,7 +81,7 @@ def main() -> int:
         return {"params": params, "opt": adamw.init_opt_state(params)}
 
     def wrapped_step(state, batch_):
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             p, o, m = step_fn(state["params"], state["opt"], batch_)
         return {"params": p, "opt": o}, m
 

@@ -25,6 +25,8 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from ..compat import shard_map as _shard_map
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
@@ -242,7 +244,7 @@ def moe_layer(
             if shared is not None
             else None
         )
-        out, aux = jax.shard_map(
+        out, aux = _shard_map(
             local,
             mesh=mesh,
             in_specs=(
@@ -295,7 +297,7 @@ def moe_layer(
         if shared is not None
         else None
     )
-    out, aux = jax.shard_map(
+    out, aux = _shard_map(
         local_dense,
         mesh=mesh,
         in_specs=(

@@ -7,6 +7,9 @@ import sys
 
 import pytest
 
+# subprocess-per-case with an 8-device host platform — excluded from the CI fast lane (-m 'not slow')
+pytestmark = pytest.mark.slow
+
 CASES = [
     "scatter_gather_roundtrip",
     "dense_path_full_multiply",

@@ -1,7 +1,7 @@
 """Local SpGEMM kernels vs dense oracles — incl. semiring property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 
 import jax.numpy as jnp
 
@@ -52,10 +52,39 @@ class TestDenseAcc:
             np.asarray(lsp.spgemm_dense_acc(a, b)), A @ B, rtol=1e-5
         )
 
-    def test_rejects_min_plus(self):
+    def test_min_plus_falls_back_to_esc(self):
+        """min/max semirings route through the ESC fallback (docstring promise):
+        result equals the ESC product densified onto a semiring.zero background."""
         _, _, a, b = make_pair(2)
-        with pytest.raises(ValueError):
-            lsp.spgemm_dense_acc(a, b, sr.MIN_PLUS)
+        m, n = a.shape[0], b.shape[1]
+        got = np.asarray(lsp.spgemm_dense_acc(a, b, sr.MIN_PLUS))
+        c, ovf = lsp.spgemm_esc(
+            a, b, out_cap=m * n + 1, flops_cap=8192, semiring=sr.MIN_PLUS
+        )
+        assert int(ovf) == 0
+        expect = np.full((m, n), np.inf, np.float32)
+        nnz = int(c.nnz)
+        rr = np.asarray(c.rows[:nnz])
+        cc = np.asarray(c.cols[:nnz])
+        vv = np.asarray(c.vals[:nnz])
+        np.minimum.at(expect, (rr, cc), vv)
+        np.testing.assert_allclose(got, expect, rtol=1e-5)
+
+    def test_max_times_falls_back_to_esc(self):
+        A, B, a, b = make_pair(12, da=0.4, db=0.4)
+        got = np.asarray(lsp.spgemm_dense_acc(a, b, sr.MAX_TIMES))
+        # dense oracle: max over k of A[i,k]*B[k,j] restricted to structural nnz
+        expect = np.zeros((A.shape[0], B.shape[1]), np.float32)
+        for i in range(A.shape[0]):
+            for j in range(B.shape[1]):
+                prods = [
+                    A[i, k] * B[k, j]
+                    for k in range(A.shape[1])
+                    if A[i, k] != 0 and B[k, j] != 0
+                ]
+                if prods:
+                    expect[i, j] = max(prods)
+        np.testing.assert_allclose(got, expect, rtol=1e-5)
 
 
 class TestESC:

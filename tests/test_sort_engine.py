@@ -1,0 +1,296 @@
+"""Packed-key sort engine + k-binned pairing: parity vs the legacy lexsort
+path (randomized, over PLUS_TIMES / MIN_PLUS / MAX_TIMES), merge overflow
+reporting, the segmented sorted merge, and the bitonic Pallas kernel."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gen
+from repro.core import local_spgemm as lsp
+from repro.core import semiring as sr
+from repro.core import sortkeys as sk
+from repro.core import sparse as sp
+from repro.core import symbolic as sym
+from repro.kernels import ops
+from repro.kernels import sort_engine as se
+from repro.testing import given, settings, strategies as st
+
+SEMIRINGS = [sr.PLUS_TIMES, sr.MIN_PLUS, sr.MAX_TIMES]
+
+
+def dense_random(rng, m, n, density):
+    x = rng.random((m, n)).astype(np.float32)
+    mask = rng.random((m, n)) < density
+    return np.where(mask, x + 0.1, 0.0).astype(np.float32)
+
+
+def random_entries(rng, m, n, cap, valid_p=0.8):
+    rows = jnp.asarray(rng.integers(0, m, cap).astype(np.int32))
+    cols = jnp.asarray(rng.integers(0, n, cap).astype(np.int32))
+    valid = jnp.asarray(rng.random(cap) < valid_p)
+    vals = jnp.asarray((rng.random(cap) + 0.1).astype(np.float32))
+    return rows, cols, vals, valid
+
+
+def assert_entries_equal(got, want, context=""):
+    for name, x, y in zip(("rows", "cols", "vals", "nnz", "ovf"), got, want):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-5,
+            err_msg=f"{context}: {name}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# packed-key sort parity vs lexsort
+# ---------------------------------------------------------------------------
+class TestPackedSortParity:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16), density=st.floats(0.05, 0.6))
+    def test_sort_rowmajor_bitexact(self, seed, density):
+        rng = np.random.default_rng(seed)
+        x = dense_random(rng, 13, 11, density)
+        a = sp.from_dense(jnp.asarray(x), cap=13 * 11 + 5)
+        packed = a.sort_rowmajor(engine="auto")
+        legacy = a.sort_rowmajor(engine="lexsort")
+        for f in ("rows", "cols", "vals"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(packed, f)), np.asarray(getattr(legacy, f)), f
+            )
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16), density=st.floats(0.05, 0.6))
+    def test_sort_colmajor_bitexact(self, seed, density):
+        rng = np.random.default_rng(seed)
+        x = dense_random(rng, 9, 17, density)
+        a = sp.from_dense(jnp.asarray(x), cap=9 * 17 + 3)
+        packed = a.sort_colmajor(engine="auto")
+        legacy = a.sort_colmajor(engine="lexsort")
+        for f in ("rows", "cols", "vals"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(packed, f)), np.asarray(getattr(legacy, f)), f
+            )
+
+
+# ---------------------------------------------------------------------------
+# coalesce engines parity over semirings
+# ---------------------------------------------------------------------------
+class TestCoalesceEngines:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        ring=st.sampled_from(["plus_times", "min_plus", "max_times"]),
+    )
+    def test_engines_match_lexsort(self, seed, ring):
+        semiring = sr.get(ring)
+        rng = np.random.default_rng(seed)
+        m, n, cap, new_cap = 14, 10, 96, 64
+        rows, cols, vals, valid = random_entries(rng, m, n, cap)
+        ref = sk.coalesce_entries(
+            rows, cols, vals, valid, (m, n), new_cap, semiring.add_kind, "lexsort"
+        )
+        for eng in ("packed", "bucket"):
+            got = sk.coalesce_entries(
+                rows, cols, vals, valid, (m, n), new_cap, semiring.add_kind, eng
+            )
+            assert_entries_equal(got, ref, f"{ring}/{eng}")
+
+    def test_auto_picks_bucket_for_small_tiles(self):
+        assert sk.choose_engine(100, 100, 1000) == "bucket"
+
+    def test_auto_falls_back_above_table_budget(self):
+        big = 1 << 13
+        assert sk.choose_engine(big, big, 1000) == "packed"
+
+    def test_lexsort_when_key_overflows_i32(self):
+        big = 1 << 17
+        assert sk.choose_engine(big, big, 1000) == "lexsort"
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_esc_engine_parity(self, seed):
+        rng = np.random.default_rng(seed)
+        A = dense_random(rng, 10, 12, 0.3)
+        B = dense_random(rng, 12, 9, 0.3)
+        a = sp.from_dense(jnp.asarray(A), cap=10 * 12 + 1)
+        b = sp.from_dense(jnp.asarray(B), cap=12 * 9 + 1)
+        outs = {}
+        for eng in ("lexsort", "packed", "bucket"):
+            c, ovf = lsp.spgemm_esc(
+                a, b, out_cap=10 * 9 + 1, flops_cap=2048, engine=eng
+            )
+            assert int(ovf) == 0
+            outs[eng] = c
+        for eng in ("packed", "bucket"):
+            for f in ("rows", "cols", "nnz"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(outs[eng], f)),
+                    np.asarray(getattr(outs["lexsort"], f)), (eng, f),
+                )
+            np.testing.assert_allclose(
+                np.asarray(outs[eng].vals), np.asarray(outs["lexsort"].vals),
+                rtol=1e-5, atol=1e-6,
+            )
+
+    def test_symbolic_exact_engine_parity(self):
+        rng = np.random.default_rng(3)
+        A = dense_random(rng, 11, 13, 0.4)
+        B = dense_random(rng, 13, 7, 0.4)
+        a = sp.from_dense(jnp.asarray(A), cap=11 * 13 + 1)
+        b = sp.from_dense(jnp.asarray(B), cap=13 * 7 + 1)
+        expect = int(((A @ B) != 0).sum())
+        for eng in ("lexsort", "packed", "bucket"):
+            assert int(lsp.local_symbolic_exact(a, b, 4096, engine=eng)) == expect
+
+
+# ---------------------------------------------------------------------------
+# merge_sparse: overflow reporting + segmented sorted merge
+# ---------------------------------------------------------------------------
+class TestMergeSparse:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        ring=st.sampled_from(["plus_times", "min_plus", "max_times"]),
+    )
+    def test_sorted_merge_matches_unsorted(self, seed, ring):
+        semiring = sr.get(ring)
+        rng = np.random.default_rng(seed)
+        xs = [dense_random(rng, 12, 8, 0.35) for _ in range(3)]
+        # parts are row-major sorted (the Merge-Fiber precondition)
+        parts = [
+            sp.from_dense(jnp.asarray(x), cap=40).sort_rowmajor() for x in xs
+        ]
+        m1, o1 = lsp.merge_sparse(parts, 96, semiring, assume_sorted=True)
+        m2, o2 = lsp.merge_sparse(parts, 96, semiring, assume_sorted=False,
+                                  engine="lexsort")
+        assert int(o1) == int(o2) == 0
+        for f in ("rows", "cols", "nnz"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(m1, f)), np.asarray(getattr(m2, f)), f
+            )
+        np.testing.assert_allclose(
+            np.asarray(m1.vals), np.asarray(m2.vals), rtol=1e-5, atol=1e-6
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16), parts=st.integers(1, 5))
+    def test_overflow_reported_consistently(self, seed, parts):
+        """Overflow = distinct-coordinate count minus out_cap, identically
+        across engines and the sorted merge (satellite: overflow reporting)."""
+        rng = np.random.default_rng(seed)
+        xs = [dense_random(rng, 9, 9, 0.5) for _ in range(parts)]
+        mats = [sp.from_dense(jnp.asarray(x), cap=50) for x in xs]
+        distinct = int((sum((x != 0).astype(np.int64) for x in xs) != 0).sum())
+        out_cap = max(distinct // 2, 1)
+        expect_ovf = distinct - out_cap
+        for kwargs in (
+            dict(engine="lexsort"),
+            dict(engine="packed"),
+            dict(engine="bucket"),
+            dict(assume_sorted=True),
+        ):
+            ps = (
+                [x.sort_rowmajor() for x in mats]
+                if kwargs.get("assume_sorted")
+                else mats
+            )
+            merged, ovf = lsp.merge_sparse(ps, out_cap, sr.PLUS_TIMES, **kwargs)
+            assert int(ovf) == expect_ovf, kwargs
+            assert int(merged.nnz) == out_cap, kwargs
+            # surviving prefix is the row-major smallest coordinate set
+            keys = (
+                np.asarray(merged.rows[: out_cap]) * 10
+                + np.asarray(merged.cols[: out_cap])
+            )
+            assert np.all(np.diff(keys) > 0), kwargs
+
+    def test_merge_empty_parts(self):
+        parts = [sp.empty((6, 6), cap=8) for _ in range(3)]
+        for kwargs in (dict(engine="bucket"), dict(assume_sorted=True)):
+            merged, ovf = lsp.merge_sparse(parts, 10, sr.PLUS_TIMES, **kwargs)
+            assert int(ovf) == 0 and int(merged.nnz) == 0
+
+
+# ---------------------------------------------------------------------------
+# bitonic Pallas kernel
+# ---------------------------------------------------------------------------
+class TestBitonicKernel:
+    @pytest.mark.parametrize("n", [8, 128, 500, 2048])
+    def test_matches_lax_sort(self, n):
+        rng = np.random.default_rng(n)
+        keys = jnp.asarray(rng.integers(0, 300, n).astype(np.int32))
+        vals = jnp.asarray(rng.random(n).astype(np.float32))
+        k1, v1 = se.sort_pairs(keys, vals, use_pallas=True, interpret=True)
+        k2, v2 = jax.lax.sort((keys, vals), num_keys=1)
+        np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+        # network is unstable: compare per-key value multisets via sums
+        s1 = jax.ops.segment_sum(v1, k1, num_segments=301)
+        s2 = jax.ops.segment_sum(v2, k2, num_segments=301)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+
+    def test_large_sizes_fall_back_to_xla(self):
+        n = se.MAX_BITONIC_ELEMS + 8
+        rng = np.random.default_rng(0)
+        keys = jnp.asarray(rng.integers(0, 99, n).astype(np.int32))
+        vals = jnp.asarray(rng.random(n).astype(np.float32))
+        k1, _ = se.sort_pairs(keys, vals, use_pallas=True, interpret=True)
+        assert np.all(np.diff(np.asarray(k1)) >= 0)
+
+
+# ---------------------------------------------------------------------------
+# k-binned pairing
+# ---------------------------------------------------------------------------
+class TestBinnedPairing:
+    def _check(self, a, b):
+        plan = sym.plan_k_bins(
+            np.asarray(a.col_counts()), np.asarray(b.row_counts()), a.cap, b.cap
+        )
+        c_ref = ops.spgemm_paired(a, b)
+        c_bin, ovf = ops.spgemm_paired_binned(
+            a, b, plan.num_bins, plan.bin_cap_a, plan.bin_cap_b,
+            bin_map=jnp.asarray(plan.bin_of_k),
+        )
+        assert int(ovf) == 0
+        np.testing.assert_allclose(
+            np.asarray(c_bin), np.asarray(c_ref), rtol=1e-4, atol=1e-4
+        )
+        return plan
+
+    def test_uniform_workload(self):
+        a = gen.erdos_renyi(64, 5, seed=1)
+        b = gen.erdos_renyi(64, 5, seed=2)
+        plan = self._check(a, b)
+        assert plan.pairings < plan.pairings_unbinned
+
+    def test_skewed_workload_reduces_pairings(self):
+        """The acceptance shape: on skewed-k inputs the balanced-bin plan
+        must still do measurably fewer pairings than O(capA×capB)."""
+        a = gen.rmat(scale=6, edge_factor=6, seed=3)
+        b = gen.rmat(scale=6, edge_factor=6, seed=4)
+        plan = self._check(a, b)
+        assert plan.num_bins > 1
+        assert plan.pairings * 2 <= plan.pairings_unbinned
+
+    def test_pallas_interpret_matches(self):
+        a = gen.erdos_renyi(48, 4, seed=5)
+        b = gen.erdos_renyi(48, 4, seed=6)
+        plan = sym.plan_k_bins(
+            np.asarray(a.col_counts()), np.asarray(b.row_counts()), a.cap, b.cap
+        )
+        c_ref = ops.spgemm_paired(a, b)
+        c_p, ovf = ops.spgemm_paired_binned(
+            a, b, plan.num_bins, plan.bin_cap_a, plan.bin_cap_b,
+            bin_map=jnp.asarray(plan.bin_of_k), use_pallas=True, interpret=True,
+        )
+        assert int(ovf) == 0
+        np.testing.assert_allclose(
+            np.asarray(c_p), np.asarray(c_ref), rtol=1e-4, atol=1e-4
+        )
+
+    def test_bin_overflow_reported(self):
+        a = gen.erdos_renyi(64, 5, seed=7)
+        b = gen.erdos_renyi(64, 5, seed=8)
+        _, ovf = ops.spgemm_paired_binned(a, b, num_bins=4, bin_cap_a=8,
+                                          bin_cap_b=8)
+        assert int(ovf) > 0

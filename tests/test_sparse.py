@@ -1,7 +1,7 @@
 """Unit + property tests for the fixed-capacity sparse core."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing import given, settings, strategies as st
 
 import jax
 import jax.numpy as jnp

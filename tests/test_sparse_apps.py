@@ -5,6 +5,9 @@ import sys
 
 import pytest
 
+# subprocess-per-case with an 8-device host platform — excluded from the CI fast lane (-m 'not slow')
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 CASES = ["mcl_clusters_blocks", "triangle_count_exact", "overlap_pairs_exact"]
