@@ -12,6 +12,10 @@ table/figure module. ``--suite local`` runs the local-kernel hot-path suite
 (packed-key sort engine + k-binned pairing) and writes
 ``BENCH_local_kernels.json`` at the repo root — op, variant, wall-ms, achieved
 GFLOP/s per row — so the perf trajectory is tracked from PR to PR.
+``--suite summa3d`` runs the end-to-end batched driver suite (pipelined vs
+serial schedule, binned vs ESC local multiply) and writes
+``BENCH_summa3d.json``, refreshing ``BENCH_local_kernels.json`` in the same
+run so both perf files stay in lockstep.
 """
 import argparse
 import json
@@ -30,6 +34,7 @@ def run_all() -> None:
         bench_mcl,
         bench_roofline,
         bench_scaling,
+        bench_summa3d,
         bench_symbolic,
     )
 
@@ -37,6 +42,7 @@ def run_all() -> None:
     bench_local_kernels.run()   # Table VII / Fig. 15
     bench_comm_model.run()      # Table II
     bench_layers_batches.run()  # Fig. 4/5 (+ Table VI trends)
+    bench_summa3d.run()         # Alg. 4 pipelined driver
     bench_symbolic.run()        # Fig. 8
     bench_scaling.run()         # Fig. 6/7/9 (alpha-beta projection)
     bench_mcl.run()             # Fig. 3 (HipMCL end-to-end)
@@ -60,17 +66,42 @@ def run_local(json_path: pathlib.Path) -> None:
     print(f"# wrote {json_path}", file=sys.stderr)
 
 
+def run_summa3d(json_path: pathlib.Path) -> None:
+    import jax
+
+    from . import bench_summa3d
+
+    print("name,us_per_call,derived")
+    rows = bench_summa3d.run_summa3d_suite()
+    payload = {
+        "suite": "summa3d_driver",
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "rows": rows,
+    }
+    json_path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {json_path}", file=sys.stderr)
+    # keep the local-kernel numbers in lockstep with the driver numbers
+    run_local(REPO_ROOT / "BENCH_local_kernels.json")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--suite", choices=("all", "local"), default="all")
+    ap.add_argument("--suite", choices=("all", "local", "summa3d"), default="all")
     ap.add_argument(
         "--json-out",
-        default=str(REPO_ROOT / "BENCH_local_kernels.json"),
-        help="output path for --suite local",
+        default=None,
+        help="output path for --suite local / --suite summa3d",
     )
     args = ap.parse_args()
     if args.suite == "local":
-        run_local(pathlib.Path(args.json_out))
+        run_local(pathlib.Path(
+            args.json_out or REPO_ROOT / "BENCH_local_kernels.json"
+        ))
+    elif args.suite == "summa3d":
+        run_summa3d(pathlib.Path(
+            args.json_out or REPO_ROOT / "BENCH_summa3d.json"
+        ))
     else:
         run_all()
 

@@ -1,30 +1,45 @@
 """BatchedSUMMA3D (paper Alg. 4) + the distributed symbolic step (Alg. 3).
 
-The driver mirrors the paper's phase structure exactly:
+The driver mirrors the paper's phase structure, pipelined so the host stays
+out of the per-batch loop (§IV-A: numeric batches stream through the
+communicators once symbolic planning is done):
 
   1. SYMBOLIC3D: one communication-avoiding pass that computes per-process
      flops upper bounds. Instead of broadcasting tiles, it reduces A's
      per-column counts along grid rows (psum) and gathers them along grid
      columns — the paper's observation that the symbolic step has the same
-     communicator structure but a far lighter payload (§IV-A, Fig. 8).
+     communicator structure but a far lighter payload (§IV-A, Fig. 8). The
+     same pass also emits B's per-column entry counts (exact per-batch
+     selection capacities — no heuristic, no spurious selection retries) and
+     the per-k count vectors of the *gathered* operands, from which the
+     k-bin plan for the paired local multiply is derived.
   2. Host-side batch planning: b from Alg. 3 line 12 (+ Eq. 2 lower-bound
      check), rounded up for block-cyclic divisibility; static capacities for
-     the numeric pass derived from the symbolic per-column vectors. This is
-     the paper's symbolic→numeric split — in JAX it also fixes the static
-     shapes the compiler needs.
-  3. Per-batch SUMMA3D (Alg. 4 line 5-6) with block-cyclic column selection
-     (Fig. 1(i)) inside the jitted step — one compile serves all batches
-     (batch index is a traced scalar).
+     the numeric pass derived from the symbolic per-column vectors; a
+     ``KBinPlan`` sizing the k-binned local multiply. This is the paper's
+     symbolic→numeric split — in JAX it also fixes the static shapes the
+     compiler needs.
+  3. Pipelined per-batch schedule: selection + multiply are FUSED into one
+     jitted SPMD step (``summa3d.summa3d_fused_step``) whose batch index is
+     a traced scalar — one executable for all batches. The driver dispatches
+     batch i+1 (and up to ``lookahead`` more) before reading batch i's
+     overflow flags, which stay device-resident; under async dispatch the
+     next batch's selection and gathers overlap the previous multiply, and
+     the consumer's host-side work overlaps device compute.
   4. The consumer callback sees each C batch and may prune/store/discard it
      (HipMCL-style usage, §V-C) — C is never materialized whole unless asked.
 
 Overflow robustness: if a static capacity is exceeded (sparsity estimate
-beaten by correlation structure), the step reports it and the driver retries
-that batch with 2× capacity — bounded, logged, and tested.
+beaten by correlation structure), the flags come back nonzero and the driver
+falls back to the synchronous retry loop for that batch — selection capacity
+grows first, then the multiply capacities (2× per attempt) — bounded, logged,
+and tested. ``pipelined=False`` keeps the fully synchronous schedule (one
+host round-trip per batch), which doubles as the benchmark baseline.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from functools import partial
 from typing import Callable, Optional, Tuple
 
@@ -37,15 +52,36 @@ from . import semiring as sr
 from ..compat import shard_map
 from .distsparse import DistSparse
 from .grid import COL_AX, LAYER_AX, ROW_AX, Grid
-from .summa3d import BatchCaps, _squeeze_tile, summa3d_dense_step, summa3d_sparse_step
-from .symbolic import batch_count, batch_count_lower_bound, batching_plan_columns
+from .summa3d import (
+    BatchCaps,
+    BinnedCaps,
+    _squeeze_tile,
+    summa3d_dense_step,
+    summa3d_fused_step,
+    summa3d_sparse_step,
+)
+from .symbolic import (
+    KBinPlan,
+    batch_count,
+    batch_count_lower_bound,
+    batching_plan_columns,
+    fold_block_cyclic,
+    plan_k_bins,
+)
 
 # cached compiles: one per (grid, caps, semiring, tile-shape) combination —
 # the batch index is a traced scalar so all batches share one executable.
 _dense_jit = jax.jit(summa3d_dense_step, static_argnames=("grid", "semiring"))
 _sparse_jit = jax.jit(
     summa3d_sparse_step,
-    static_argnames=("grid", "caps", "semiring", "sorted_merge"),
+    static_argnames=("grid", "caps", "semiring", "sorted_merge", "kbin"),
+)
+_fused_jit = jax.jit(
+    summa3d_fused_step,
+    static_argnames=(
+        "grid", "num_batches", "sel_cap", "caps", "semiring", "sorted_merge",
+        "path", "kbin",
+    ),
 )
 
 Array = jnp.ndarray
@@ -54,19 +90,26 @@ Array = jnp.ndarray
 # ---------------------------------------------------------------------------
 # Distributed symbolic step (Alg. 3)
 # ---------------------------------------------------------------------------
-def symbolic3d(a: DistSparse, b: DistSparse, grid: Grid) -> np.ndarray:
-    """Per-(process, local column of B) flops upper bound.
+@dataclasses.dataclass(frozen=True)
+class SymbolicCounts:
+    """Host-side output of the distributed symbolic pass (all numpy).
 
-    Returns host array of shape (pr, pc, l, tn_b):
-      flops[i,j,k,c] = Σ_{t ∈ B(:, block j, layer k), col(t)=c}
-                           nnz(A^(k)(row-block i, k_idx(t)))
-
-    which is exactly the number of partial products process (i,j,k) forms for
-    output column c in the numeric step (A gathered over the grid row, B over
-    the grid column group). Only count *vectors* travel — the paper's point
-    that the symbolic step shares the numeric communicators but moves a far
-    lighter payload (§IV-A, Fig. 8).
+    Only count *vectors* ever travel (§IV-A, Fig. 8) — the same payload now
+    also carries what the numeric pass needs to size selection buffers and
+    the k-bin plan, so no extra communication round is spent on either.
     """
+
+    percol: np.ndarray  # (pr, pc, l, tn_b) flops per local output column
+    b_colcounts: np.ndarray  # (pr, pc, l, tn_b) B entries per local column
+    a_kcounts: np.ndarray  # (pr, l, k_tot) per-k counts of gathered A
+    b_kcounts: np.ndarray  # (pc, l, k_tot) per-k counts of gathered B
+
+
+@partial(jax.jit, static_argnames=("grid",))
+def _symbolic3d_jit(a: DistSparse, b: DistSparse, grid: Grid):
+    """One jitted executable per (grid, operand-structure) — the shard_map is
+    built inside the traced function, so re-running the planner hits the jit
+    cache instead of rebuilding (and re-lowering) the SPMD program."""
     _, tn_b = b.tile_shape
     _, wl_a = a.tile_shape
 
@@ -98,22 +141,59 @@ def symbolic3d(a: DistSparse, b: DistSparse, grid: Grid) -> np.ndarray:
         # sum over the row group -> each process reads its own row
         percol_all = lax.psum(percol_all, ROW_AX)
         percol = percol_all[i_own]
-        return percol[None, None, None]
+        # extras for the numeric pass, free on the same communicators:
+        # B per-column entry counts (exact selection capacities) and the
+        # per-k counts of the gathered operands (k-bin plan input).
+        bcc = b_loc.col_counts()  # (tn_b,)
+        rc_local = b_loc.row_counts()  # (wl,)
+        rc_full = lax.all_gather(rc_local, ROW_AX).reshape(-1)  # (k_tot,)
+        return (
+            percol[None, None, None],
+            bcc[None, None, None],
+            cc_full[None, None, None],
+            rc_full[None, None, None],
+        )
 
     spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
-    in_specs = (
+    in_specs = tuple(
         DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
-                   shape=a.shape, tile_shape=a.tile_shape,
-                   grid_shape=a.grid_shape, kind=a.kind),
-        DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
-                   shape=b.shape, tile_shape=b.tile_shape,
-                   grid_shape=b.grid_shape, kind=b.kind),
+                   shape=d.shape, tile_shape=d.tile_shape,
+                   grid_shape=d.grid_shape, kind=d.kind)
+        for d in (a, b)
     )
-    fn = jax.jit(shard_map(
-        step, mesh=grid.mesh, in_specs=in_specs, out_specs=spec3,
+    fn = shard_map(
+        step, mesh=grid.mesh, in_specs=in_specs,
+        out_specs=(spec3, spec3, spec3, spec3),
         check_vma=False,
-    ))
-    return np.asarray(fn(a, b))  # (pr, pc, l, tn_b)
+    )
+    return fn(a, b)
+
+
+def symbolic3d_counts(a: DistSparse, b: DistSparse, grid: Grid) -> SymbolicCounts:
+    """Run the distributed symbolic step; see ``SymbolicCounts``."""
+    percol, bcc, cc_full, rc_full = _symbolic3d_jit(a, b, grid)
+    # cc_full is a function of (row block, layer) only; rc_full of
+    # (col block, layer) only — slice the redundant grid axes away.
+    return SymbolicCounts(
+        percol=np.asarray(percol),
+        b_colcounts=np.asarray(bcc),
+        a_kcounts=np.asarray(cc_full)[:, 0],  # (pr, l, k_tot)
+        b_kcounts=np.asarray(rc_full)[0],  # (pc, l, k_tot)
+    )
+
+
+def symbolic3d(a: DistSparse, b: DistSparse, grid: Grid) -> np.ndarray:
+    """Per-(process, local column of B) flops upper bound.
+
+    Returns host array of shape (pr, pc, l, tn_b):
+      flops[i,j,k,c] = Σ_{t ∈ B(:, block j, layer k), col(t)=c}
+                           nnz(A^(k)(row-block i, k_idx(t)))
+
+    which is exactly the number of partial products process (i,j,k) forms for
+    output column c in the numeric step (A gathered over the grid row, B over
+    the grid column group). ``symbolic3d_counts`` exposes the fuller payload.
+    """
+    return symbolic3d_counts(a, b, grid).percol
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +206,22 @@ class BatchPlan:
     total_flops: int  # Σ multiply ops (global)
     max_unmerged_nnz: int  # max over processes, b=1
     per_batch_flops: np.ndarray  # (num_batches,) global flops per batch
+    sel_cap: int = 0  # exact per-batch selection capacity (B entries)
+    kbin: Optional[KBinPlan] = None  # k-bin plan for the paired local multiply
+
+    @property
+    def binned_profitable(self) -> bool:
+        """Plan-driven switch: does k-binning strictly cut pairing work?
+
+        Requires real bin structure (num_bins > 1): with a single bin the
+        capacity-product baseline still shrinks (compaction drops padding),
+        but there is no structural reduction to pay the binning pass for.
+        """
+        return (
+            self.kbin is not None
+            and self.kbin.num_bins > 1
+            and self.kbin.pairings < self.kbin.pairings_unbinned
+        )
 
 
 def plan_batches(
@@ -138,7 +234,8 @@ def plan_batches(
     force_num_batches: Optional[int] = None,
 ) -> BatchPlan:
     """Run the symbolic step and derive b + static capacities (host math)."""
-    percol = symbolic3d(a, b, grid)  # (pr, pc, l, tn_b)
+    counts = symbolic3d_counts(a, b, grid)
+    percol = counts.percol  # (pr, pc, l, tn_b)
     pr, pc, l, tn_b = percol.shape
     per_process_flops = percol.sum(axis=-1)  # (pr, pc, l)
     max_unmerged = int(per_process_flops.max())
@@ -153,18 +250,9 @@ def plan_batches(
             max_unmerged, max_nnz_a, max_nnz_b, per_process_memory, r=r_bytes
         )
     nb = batching_plan_columns(tn_b, nb, l)
-    wbl = tn_b // (nb * l)  # block width of the block-cyclic split
 
-    # per-(process, batch, piece) flops: fold local columns into
-    # (block, within) and map block -> (piece k2 = block // nb, batch = block % nb)
-    blocks = percol.reshape(pr, pc, l, nb * l, wbl).sum(axis=-1)  # (pr,pc,l,nb*l)
-    piece_of_block = np.arange(nb * l) // nb
-    batch_of_block = np.arange(nb * l) % nb
-    flops_pbp = np.zeros((pr, pc, l, nb, l), np.int64)  # [..., batch, piece]
-    for blk in range(nb * l):
-        flops_pbp[:, :, :, batch_of_block[blk], piece_of_block[blk]] += blocks[
-            :, :, :, blk
-        ]
+    # per-(process, batch, piece) flops via the block-cyclic fold
+    flops_pbp = fold_block_cyclic(percol, nb, l)  # (pr,pc,l,nb,l)
     per_batch_proc = flops_pbp.sum(axis=-1)  # (pr,pc,l,nb)
     max_batch_flops = int(per_batch_proc.max())
     max_piece_flops = int(flops_pbp.max())
@@ -178,6 +266,23 @@ def plan_batches(
     piece_cap = _rup8(min(max(int(max_piece_flops * slack), 64), tm_a * (wb // l)))
     c_cap = _rup8(min(max(int(merged_piece * slack), 64), tm_a * (wb // l)))
     caps = BatchCaps(flops_cap=flops_cap, d_cap=d_cap, piece_cap=piece_cap, c_cap=c_cap)
+
+    # exact per-batch selection capacity: max over (process, batch) of the
+    # number of B entries the block-cyclic selection keeps — from the
+    # symbolic B-column counts, so the first batch can never trigger a
+    # spurious selection retry on skewed inputs.
+    sel_per_batch = fold_block_cyclic(counts.b_colcounts, nb, l).sum(axis=-1)
+    sel_cap = min(_rup8(max(int(sel_per_batch.max()), 8)), b.cap)
+
+    # k-bin plan for the gathered pairing: per-k count vectors bounded
+    # element-wise over (block, layer) so the static caps hold on every
+    # process; gathered capacities are pc·capA / pr·sel_cap slots.
+    kbin = plan_k_bins(
+        counts.a_kcounts.max(axis=(0, 1)),
+        counts.b_kcounts.max(axis=(0, 1)),
+        pc * a.cap,
+        pr * sel_cap,
+    )
 
     # Eq. (2) lower bound (global memory form) for reporting/validation
     nnz_a = int(np.asarray(a.nnz).sum())
@@ -198,6 +303,8 @@ def plan_batches(
         total_flops=total_flops,
         max_unmerged_nnz=max_unmerged,
         per_batch_flops=per_batch_flops,
+        sel_cap=sel_cap,
+        kbin=kbin,
     )
 
 
@@ -233,13 +340,14 @@ def batch_column_map(n: int, grid: Grid, num_batches: int, batch: int) -> np.nda
 
 
 # ---------------------------------------------------------------------------
-# The batched driver (Alg. 4)
+# The batched driver (Alg. 4) — pipelined scheduler
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class BatchedResult:
     plan: BatchPlan
     num_retries: int
     consumed: list  # consumer outputs per batch
+    binned: bool = False  # did the sparse local multiply run k-binned?
 
 
 def batched_summa3d(
@@ -255,6 +363,9 @@ def batched_summa3d(
     max_retries: int = 4,
     force_num_batches: Optional[int] = None,
     sorted_merge: bool = True,
+    pipelined: bool = True,
+    lookahead: int = 2,
+    binned: object = "auto",
 ) -> BatchedResult:
     """Multiply A·B in batches; the consumer sees each batch then it's freed.
 
@@ -262,96 +373,105 @@ def batched_summa3d(
     DistSparse (path="sparse") or stacked dense tiles (path="dense").
     ``sorted_merge`` selects the segmented (merge-not-sort) Merge-Fiber in
     the per-batch sparse step.
+
+    ``pipelined=True`` (default) runs the Alg. 4 loop as a lookahead window:
+    batch i+1..i+lookahead are dispatched before batch i's device-resident
+    overflow flags are read, so selection/gather of the next batch overlaps
+    the previous multiply and the consumer's host work overlaps device
+    compute. A nonzero flag drops that batch to the synchronous retry loop
+    (capacities ×2 per attempt — selection first, multiply second).
+    ``pipelined=False`` is the serial schedule: one host sync per batch.
+
+    ``binned`` switches the sparse local multiply to the k-binned paired
+    kernel: "auto" uses it when the symbolic bin plan strictly reduces
+    pairing work (and the semiring is plus_times); True forces it; False
+    pins ESC. Consumers are always invoked in batch order.
     """
     plan = plan_batches(
         a, b, grid, per_process_memory, r_bytes=r_bytes, slack=slack,
         force_num_batches=force_num_batches,
     )
     nb = plan.num_batches
-    l = grid.l
-    tn_b = b.tile_shape[1]
-    wb = tn_b // nb
-    # batch selection capacity: worst-case per-batch share of B entries
-    nnz_host = np.asarray(b.nnz)
-    sel_cap = _rup8(max(int(nnz_host.max() * slack / max(nb // 2, 1)), 64))
-    sel_cap = min(sel_cap, b.cap)
+    n_cols = b.shape[1]
+
+    if binned == "auto":
+        use_binned = (
+            path == "sparse"
+            and semiring.name == "plus_times"
+            and plan.binned_profitable
+        )
+    else:
+        use_binned = bool(binned) and path == "sparse"
+    if use_binned and semiring.name != "plus_times":
+        raise ValueError(
+            f"k-binned local multiply requires plus_times, got {semiring.name}"
+        )
+    kb = (
+        BinnedCaps(plan.kbin.num_bins, plan.kbin.bin_cap_a, plan.kbin.bin_cap_b)
+        if use_binned else None
+    )
+    bin_of_k = jnp.asarray(plan.kbin.bin_of_k) if use_binned else None
+
+    caps, sel_cap = plan.caps, plan.sel_cap
+    retries = 0
+
+    def dispatch(bi: int, caps_: BatchCaps, sel_cap_: int, kb_):
+        """Async-dispatch one fused batch step; nothing blocks here."""
+        return _fused_jit(
+            a, b, jnp.int32(bi), bin_of_k, grid=grid, num_batches=nb,
+            sel_cap=sel_cap_, caps=caps_, semiring=semiring,
+            sorted_merge=sorted_merge, path=path, kbin=kb_,
+        )
+
+    def grow(o: np.ndarray, caps_: BatchCaps, sel_cap_: int, kb_):
+        """Next capacity plan after an overflow: selection first (a truncated
+        selection makes the multiply flags unreliable), multiply second."""
+        if o[0] > 0:
+            sel_cap_ = min(_rup8(max(sel_cap_ * 2, 8)), b.cap)
+        elif o[1] > 0:
+            caps_ = caps_.doubled()
+            kb_ = kb_.doubled() if kb_ is not None else None
+        return caps_, sel_cap_, kb_
+
+    def run_batch_sync(bi: int, caps_: BatchCaps, sel_cap_: int, kb_):
+        """The kept, tested synchronous retry loop (§IV-A robustness)."""
+        nonlocal retries
+        for _ in range(max_retries + 1):
+            c_batch, ovf = dispatch(bi, caps_, sel_cap_, kb_)
+            o = np.asarray(ovf)
+            if not o.any():
+                return c_batch
+            retries += 1
+            caps_, sel_cap_, kb_ = grow(o, caps_, sel_cap_, kb_)
+        raise RuntimeError(
+            f"batch {bi}: capacity overflow persisted after {max_retries} retries"
+        )
 
     consumed = []
-    retries = 0
-    caps = plan.caps
-    for bi in range(nb):
-        ok = False
-        cur_caps, cur_sel_cap = caps, sel_cap
-        for attempt in range(max_retries + 1):
-            b_sel, ovf_sel = _select_batch_jit(b, grid, bi, nb, l, cur_sel_cap, wb)
-            if int(ovf_sel) > 0:
-                cur_sel_cap = min(_rup8(cur_sel_cap * 2), b.cap)
-                retries += 1
-                continue
-            if path == "dense":
-                c_batch = _dense_jit(a, b_sel, grid=grid, semiring=semiring)
-                ok = True
-                break
-            c_batch, ovf = _sparse_jit(
-                a, b_sel, grid=grid, caps=cur_caps, semiring=semiring,
-                sorted_merge=sorted_merge,
-            )
-            if int(ovf) == 0:
-                ok = True
-                break
+
+    def finish(bi: int, c_batch, ovf) -> None:
+        """Sync point: read batch bi's flags, retry if beaten, consume."""
+        nonlocal retries
+        o = np.asarray(ovf)
+        if o.any():
             retries += 1
-            cur_caps = BatchCaps(
-                flops_cap=cur_caps.flops_cap * 2,
-                d_cap=cur_caps.d_cap * 2,
-                piece_cap=cur_caps.piece_cap * 2,
-                c_cap=cur_caps.c_cap * 2,
-            )
-        if not ok:
-            raise RuntimeError(
-                f"batch {bi}: capacity overflow persisted after {max_retries} retries"
-            )
-        col_map = batch_column_map(b.shape[1], grid, nb, bi)
+            c_batch = run_batch_sync(bi, *grow(o, caps, sel_cap, kb))
+        col_map = batch_column_map(n_cols, grid, nb, bi)
         consumed.append(consumer(bi, c_batch, col_map))
-    return BatchedResult(plan=plan, num_retries=retries, consumed=consumed)
 
-
-@partial(jax.jit, static_argnames=("grid", "num_batches", "l", "cap", "wb"))
-def _select_batch_jit(b: DistSparse, grid: Grid, batch, num_batches: int, l: int,
-                      cap: int, wb: int):
-    def step(b_t: DistSparse, batch_):
-        b_loc = _squeeze_tile(b_t)
-        sel, ovf = b_loc.select_cols_blockcyclic(
-            batch_, num_batches, l, new_cap=cap
-        )
-        ovf = lax.pmax(lax.pmax(lax.pmax(ovf, ROW_AX), COL_AX), LAYER_AX)
-        return (
-            sel.rows[None, None, None],
-            sel.cols[None, None, None],
-            sel.vals[None, None, None],
-            sel.nnz[None, None, None],
-            ovf,
-        )
-
-    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
-    spec0 = jax.sharding.PartitionSpec()
-    in_specs = (
-        DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
-                   shape=b.shape, tile_shape=b.tile_shape,
-                   grid_shape=b.grid_shape, kind=b.kind),
-        spec0,
+    if not pipelined:
+        for bi in range(nb):
+            c_batch = run_batch_sync(bi, caps, sel_cap, kb)
+            col_map = batch_column_map(n_cols, grid, nb, bi)
+            consumed.append(consumer(bi, c_batch, col_map))
+    else:
+        inflight = deque()
+        for bi in range(nb):
+            inflight.append((bi,) + tuple(dispatch(bi, caps, sel_cap, kb)))
+            if len(inflight) > lookahead:
+                finish(*inflight.popleft())
+        while inflight:
+            finish(*inflight.popleft())
+    return BatchedResult(
+        plan=plan, num_retries=retries, consumed=consumed, binned=use_binned
     )
-    fn = shard_map(
-        step, mesh=grid.mesh, in_specs=in_specs,
-        out_specs=(spec3, spec3, spec3, spec3, spec0),
-        check_vma=False,
-    )
-    rows, cols, vals, nnz, ovf = fn(b, jnp.int32(batch))
-    m, n = b.shape
-    sel = DistSparse(
-        rows=rows, cols=cols, vals=vals, nnz=nnz,
-        shape=(m, n // num_batches),
-        tile_shape=(b.tile_shape[0], wb),
-        grid_shape=b.grid_shape,
-        kind="B",
-    )
-    return sel, ovf

@@ -12,6 +12,10 @@ insight (unsorted accumulation into a direct-addressed structure) as:
   * ``spgemm_esc`` — expand–sort–compress, keeping *inputs unsorted* and only
     producing sorted output at the final compress, mirroring the paper's
     sortedness observation. Sorting maps to TPU-friendly sorting networks.
+  * ``spgemm_kbinned`` — k-binned paired multiply (``kernels/spgemm_binned``):
+    counting-sort both operands by contraction range, pair only matching bins,
+    accumulate dense, sparsify. Same (C, overflow) contract as ``spgemm_esc``;
+    the batch plan picks between them per workload.
   * ``spmm`` — sparse × dense (used by MoE dispatch and the dense-acc path).
   * ``local_symbolic`` — Alg. 3's LocalSymbolic: flops (upper bound) and exact
     output nnz of a local product, without forming values.
@@ -27,6 +31,7 @@ import jax.numpy as jnp
 
 from . import semiring as sr
 from . import sortkeys
+from . import sparse as sparse_mod
 from .sparse import SparseCOO, empty
 
 Array = jnp.ndarray
@@ -205,6 +210,57 @@ def _coalesce_semiring(
         add_kind=semiring.add_kind, engine=engine,
     )
     return SparseCOO(rows, cols, vals, nnz, (m, n)), overflow
+
+
+def spgemm_kbinned(
+    a: SparseCOO,
+    b: SparseCOO,
+    out_cap: int,
+    num_bins: int,
+    bin_cap_a: int,
+    bin_cap_b: int,
+    bin_of_k: Array = None,
+    semiring: sr.Semiring = sr.PLUS_TIMES,
+) -> Tuple[SparseCOO, Array]:
+    """Sparse × sparse → sparse via the k-binned paired kernel.
+
+    Both operands are counting-sorted into ``num_bins`` contraction ranges
+    (``bin_of_k`` — a monotone map from ``symbolic.plan_k_bins`` — absorbs
+    skewed-k distributions) and only matching bins are paired:
+    O(Σ_g capA_g×capB_g) pairings instead of O(capA×capB). The paired
+    accumulation lands in a dense (m, n) block (narrow under batching), which
+    is then sparsified to ``out_cap`` entries, row-major sorted — the same
+    output contract as ``spgemm_esc``, so the two are interchangeable behind
+    the batch plan's switch.
+
+    Requires the plus_times semiring (the pairing kernel accumulates with
+    + and ×). Returns (C, overflow) where overflow counts both bin-capacity
+    and ``out_cap`` violations (§IV-A retry discipline).
+    """
+    from ..kernels.spgemm_binned import spgemm_binned_dense
+
+    assert semiring.name == "plus_times", (
+        f"k-binned paired multiply requires plus_times, got {semiring.name}"
+    )
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    # gathered operands declare every slot live and rely on sentinel-k
+    # padding — mask on the contraction index, not just nnz
+    a_valid = a.valid_mask() & (a.cols < k)
+    b_valid = b.valid_mask() & (b.rows < k)
+    av = jnp.where(a_valid, a.vals, 0)
+    bv = jnp.where(b_valid, b.vals, 0)
+    on_tpu = jax.default_backend() == "tpu"
+    dense, ovf_bin = spgemm_binned_dense(
+        a.rows, a.cols, av, a_valid, b.rows, b.cols, bv, b_valid,
+        m, n, k, num_bins, bin_cap_a, bin_cap_b, bin_map=bin_of_k,
+        use_pallas=on_tpu, interpret=not on_tpu,
+    )
+    # the pairing kernel accumulates f32; restore the input dtype so the
+    # binned and ESC paths stay interchangeable behind the plan switch
+    c, ovf_out = sparse_mod.from_dense_overflow(dense.astype(a.dtype), out_cap)
+    return c, ovf_bin + ovf_out
 
 
 def merge_sparse(

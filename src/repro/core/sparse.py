@@ -160,6 +160,56 @@ class SparseCOO:
         )
         return shifted.compact(keep, new_cap)
 
+    def split_col_blocks(self, num_pieces: int, piece_cap: int):
+        """Partitioned ColSplit (Alg. 2 line 4): all ``num_pieces`` column
+        pieces in ONE pass instead of ``num_pieces`` sequential
+        ``select_col_block`` scans.
+
+        Entry e goes to piece ``col // (n/num_pieces)``; its slot within the
+        piece is its rank among same-piece entries (a cumulative one-hot
+        count), so the original entry order is preserved per piece — a
+        row-major-sorted input yields row-major-sorted pieces, exactly the
+        invariant the segmented Merge-Fiber relies on. Columns are remapped
+        to [0, n/num_pieces).
+
+        Returns ``(rows, cols, vals, nnz, overflow)`` where the first three
+        are (num_pieces, piece_cap) sentinel-padded arrays, ``nnz`` is
+        i32[num_pieces], and ``overflow`` counts entries dropped because a
+        piece exceeded ``piece_cap``.
+        """
+        m, n = self.shape
+        assert n % num_pieces == 0, (n, num_pieces)
+        piece_w = n // num_pieces
+        valid = self.valid_mask()
+        piece = jnp.where(valid, self.cols // piece_w, num_pieces)
+        onehot = (
+            piece[:, None] == jnp.arange(num_pieces, dtype=jnp.int32)[None, :]
+        ).astype(jnp.int32)  # (cap, num_pieces)
+        rank_excl = jnp.cumsum(onehot, axis=0) - onehot  # rank within piece
+        rank = jnp.take_along_axis(
+            rank_excl, jnp.clip(piece, 0, num_pieces - 1)[:, None], axis=1
+        )[:, 0]
+        counts = jnp.sum(onehot, axis=0)  # (num_pieces,)
+        ok = valid & (piece < num_pieces) & (rank < piece_cap)
+        flat = num_pieces * piece_cap
+        dest = jnp.where(ok, piece * piece_cap + rank, flat)  # discard bucket
+        rows = jnp.full((flat + 1,), m, jnp.int32).at[dest].set(
+            jnp.where(ok, self.rows, m)
+        )[:flat]
+        cols = jnp.full((flat + 1,), piece_w, jnp.int32).at[dest].set(
+            jnp.where(ok, self.cols - piece * piece_w, piece_w)
+        )[:flat]
+        vals = jnp.zeros((flat + 1,), self.vals.dtype).at[dest].set(
+            jnp.where(ok, self.vals, 0)
+        )[:flat]
+        nnz = jnp.minimum(counts, piece_cap)
+        overflow = jnp.sum(jnp.maximum(counts - piece_cap, 0)).astype(jnp.int32)
+        shape2 = (num_pieces, piece_cap)
+        return (
+            rows.reshape(shape2), cols.reshape(shape2), vals.reshape(shape2),
+            nnz, overflow,
+        )
+
     def select_cols_blockcyclic(
         self, batch, num_batches: int, num_layers: int, new_cap: int
     ):
@@ -233,6 +283,15 @@ def from_dense(x: Array, cap: int) -> SparseCOO:
     nnz = jnp.minimum(jnp.sum(x != 0), cap).astype(jnp.int32)
     vals = jnp.where(jnp.arange(cap) < nnz, x[rows, cols], 0).astype(x.dtype)
     return SparseCOO(rows.astype(jnp.int32), cols.astype(jnp.int32), vals, nnz, (m, n))
+
+
+def from_dense_overflow(x: Array, cap: int) -> Tuple[SparseCOO, Array]:
+    """Jit-compatible dense→COO that also reports how many nonzeros did not
+    fit in ``cap`` — the sparsify step of dense-accumulator local multiplies,
+    which must follow the same §IV-A overflow-retry discipline as ESC."""
+    s = from_dense(x, cap)
+    total = jnp.sum(x != 0).astype(jnp.int32)
+    return s, jnp.maximum(total - cap, 0)
 
 
 def from_numpy_coo(

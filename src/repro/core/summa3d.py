@@ -13,12 +13,24 @@ One shard_map'd step computes a full 3D multiply for one batch:
      into the same sort-free accumulation, which is the TPU rendering of the
      paper's "merge once after all stages" observation (§III-A).
   2. Local-Multiply (Alg. 1 line 7): dense-accumulator path (spmm into a
-     dense D tile — identity-hash accumulator) or sparse ESC path
-     (expand-sort-compress with static capacities from the symbolic step).
+     dense D tile — identity-hash accumulator) or sparse path with a
+     plan-driven switch between ESC (expand-sort-compress, any semiring) and
+     the k-binned paired kernel (``local_spgemm.spgemm_kbinned``: pair only
+     matching contraction bins — O(Σ_g capA_g×capB_g) pairings instead of
+     O(capA×capB); the symbolic step emits the bin plan from the count
+     vectors it already moves).
   3. AllToAll-Fiber + Merge-Fiber (Alg. 2 lines 4-6): dense path lowers the
      pair to ONE ``lax.psum_scatter`` over the layer axis (all-to-all + local
-     add is exactly reduce-scatter); sparse path does the literal
-     ``lax.all_to_all`` of column pieces followed by a sort-free merge.
+     add is exactly reduce-scatter); sparse path runs ColSplit as a single
+     partitioned, order-preserving split into all l pieces, then the literal
+     ``lax.all_to_all`` followed by a sort-free (segmented, merge-not-sort)
+     merge.
+
+``summa3d_fused_step`` additionally fuses the batch's block-cyclic column
+selection into the same SPMD program with the batch index as a traced scalar:
+one executable serves every batch, and the pipelined driver
+(``batched.batched_summa3d``) dispatches batch i+1 while batch i computes,
+reading the device-resident overflow flags only when it drains its window.
 
 Sentinel discipline: before gathering, every device rewrites its padding
 entries to the *global* contraction sentinel (k_tot) so offset arithmetic
@@ -39,7 +51,7 @@ from . import semiring as sr
 from ..compat import axis_size, shard_map
 from .distsparse import DistSparse
 from .grid import COL_AX, LAYER_AX, ROW_AX, Grid
-from .local_spgemm import spgemm_esc, spmm, merge_sparse
+from .local_spgemm import spgemm_esc, spgemm_kbinned, spmm, merge_sparse
 from .sparse import SparseCOO
 
 Array = jnp.ndarray
@@ -53,6 +65,34 @@ class BatchCaps:
     d_cap: int  # unmerged D tile entries per process (sparse path)
     piece_cap: int  # per-fiber-piece entries (sparse path)
     c_cap: int  # merged C tile entries per process (sparse path)
+
+    def doubled(self) -> "BatchCaps":
+        """Next capacity plan for the overflow-retry loop (§IV-A)."""
+        return BatchCaps(
+            flops_cap=self.flops_cap * 2, d_cap=self.d_cap * 2,
+            piece_cap=self.piece_cap * 2, c_cap=self.c_cap * 2,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class BinnedCaps:
+    """Static parameters of the k-binned local multiply (hashable — jit-static).
+
+    The dynamic part of the bin plan (the monotone ``bin_of_k`` map over the
+    per-layer contraction space) travels as a replicated traced array so one
+    executable serves any bin boundary choice.
+    """
+
+    num_bins: int
+    bin_cap_a: int  # gathered-A entries per bin, per process
+    bin_cap_b: int  # gathered-B entries per bin, per process
+
+    def doubled(self) -> "BinnedCaps":
+        return BinnedCaps(
+            num_bins=self.num_bins,
+            bin_cap_a=self.bin_cap_a * 2,
+            bin_cap_b=self.bin_cap_b * 2,
+        )
 
 
 def _squeeze_tile(d: DistSparse) -> SparseCOO:
@@ -229,12 +269,73 @@ def summa3d_dense_step(
 
 
 # ---------------------------------------------------------------------------
-# Sparse (ESC) path
+# Sparse (ESC / k-binned) path
 # ---------------------------------------------------------------------------
+def _pmax_grid(x: Array) -> Array:
+    return lax.pmax(lax.pmax(lax.pmax(x, ROW_AX), COL_AX), LAYER_AX)
+
+
+def _sparse_tile_body(
+    a_loc: SparseCOO, b_loc: SparseCOO, l: int, caps: BatchCaps,
+    semiring: sr.Semiring, sorted_merge: bool,
+    kbin: "BinnedCaps" = None, bin_of_k: Array = None,
+) -> Tuple[SparseCOO, Array]:
+    """Per-device sparse pipeline (inside shard_map): gather → local multiply
+    → partitioned ColSplit → AllToAll-Fiber → Merge-Fiber.
+
+    ``kbin`` selects the local multiply: None runs ESC (any semiring); a
+    ``BinnedCaps`` runs the k-binned paired kernel (plus_times only), pairing
+    O(Σ_g capA_g×capB_g) instead of O(capA×capB) — the plan-driven switch the
+    symbolic step emits. Both produce a row-major-sorted D tile, so the
+    downstream split/merge invariants are identical.
+    """
+    tm_a, _ = a_loc.shape
+    _, tn_b = b_loc.shape
+    piece_w = tn_b // l
+    a_cat = _gather_A(a_loc)
+    b_cat = _gather_B(b_loc)
+    if kbin is None:
+        d_tile, ovf_mul = spgemm_esc(
+            a_cat, b_cat, out_cap=caps.d_cap, flops_cap=caps.flops_cap,
+            semiring=semiring,
+        )  # (tm, tn_b) sparse, row-major sorted
+    else:
+        d_tile, ovf_mul = spgemm_kbinned(
+            a_cat, b_cat, caps.d_cap, kbin.num_bins, kbin.bin_cap_a,
+            kbin.bin_cap_b, bin_of_k=bin_of_k, semiring=semiring,
+        )
+    # ColSplit (Alg. 2 line 4): one partitioned split into all l pieces,
+    # order-preserving (pieces stay row-major sorted), sized by piece_cap
+    pr_, pc_, pv_, pn_, ovf_split = d_tile.split_col_blocks(l, caps.piece_cap)
+    # AllToAll-Fiber (Alg. 2 line 5)
+    pr_ = lax.all_to_all(pr_, LAYER_AX, split_axis=0, concat_axis=0)
+    pc_ = lax.all_to_all(pc_, LAYER_AX, split_axis=0, concat_axis=0)
+    pv_ = lax.all_to_all(pv_, LAYER_AX, split_axis=0, concat_axis=0)
+    pn_ = lax.all_to_all(pn_[:, None], LAYER_AX, split_axis=0, concat_axis=0)[:, 0]
+    # Merge-Fiber (Alg. 2 line 6): sort-free merge of l received pieces
+    parts = [
+        SparseCOO(pr_[k], pc_[k], pv_[k], pn_[k], (tm_a, piece_w))
+        for k in range(l)
+    ]
+    c_tile, ovf_merge = merge_sparse(
+        parts, caps.c_cap, semiring, assume_sorted=sorted_merge
+    )
+    return c_tile, ovf_mul + ovf_split + ovf_merge
+
+
+def _dist_spec(d: DistSparse, spec3) -> DistSparse:
+    """The in_specs pytree for one DistSparse operand."""
+    return DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
+                      shape=d.shape, tile_shape=d.tile_shape,
+                      grid_shape=d.grid_shape, kind=d.kind)
+
+
 def summa3d_sparse_step(
     a: DistSparse, b_batch: DistSparse, grid: Grid, caps: BatchCaps,
     semiring: sr.Semiring = sr.PLUS_TIMES,
     sorted_merge: bool = True,
+    kbin: BinnedCaps = None,
+    bin_of_k: Array = None,
 ) -> Tuple[DistSparse, Array]:
     """One batched-SUMMA3D step, sparse path. Returns (C tiles, overflow).
 
@@ -244,8 +345,10 @@ def summa3d_sparse_step(
     with the next larger capacity plan (paper robustness, §IV-A).
 
     ``sorted_merge=True`` runs Merge-Fiber as a segmented k-way merge: the l
-    received pieces are column splits of row-major-sorted ESC outputs, so
-    they arrive sorted and only need merging, never re-sorting (§IV-D).
+    received pieces are column splits of row-major-sorted local-multiply
+    outputs, so they arrive sorted and only need merging, never re-sorting
+    (§IV-D). ``kbin``/``bin_of_k`` (from the symbolic bin plan) switch the
+    local multiply to the k-binned paired kernel.
     """
     tm_a, _ = a.tile_shape
     _, tn_b = b_batch.tile_shape
@@ -253,72 +356,135 @@ def summa3d_sparse_step(
     assert tn_b % l == 0
     piece_w = tn_b // l
 
-    def step(a_t: DistSparse, b_t: DistSparse):
-        a_loc = _squeeze_tile(a_t)
-        b_loc = _squeeze_tile(b_t)
-        a_cat = _gather_A(a_loc)
-        b_cat = _gather_B(b_loc)
-        d_tile, ovf_mul = spgemm_esc(
-            a_cat, b_cat, out_cap=caps.d_cap, flops_cap=caps.flops_cap,
-            semiring=semiring,
-        )  # (tm, tn_b) sparse, row-major sorted
-        # ColSplit (Alg. 2 line 4): l column pieces, remapped to [0, piece_w)
-        pieces_r, pieces_c, pieces_v, pieces_n = [], [], [], []
-        ovf_split = jnp.int32(0)
-        for k in range(l):
-            piece, ovf = d_tile.select_col_block(k * piece_w, piece_w, caps.piece_cap)
-            ovf_split = ovf_split + ovf
-            pieces_r.append(piece.rows)
-            pieces_c.append(piece.cols)
-            pieces_v.append(piece.vals)
-            pieces_n.append(piece.nnz)
-        pr_ = jnp.stack(pieces_r)  # (l, piece_cap)
-        pc_ = jnp.stack(pieces_c)
-        pv_ = jnp.stack(pieces_v)
-        pn_ = jnp.stack(pieces_n)
-        # AllToAll-Fiber (Alg. 2 line 5)
-        pr_ = lax.all_to_all(pr_, LAYER_AX, split_axis=0, concat_axis=0)
-        pc_ = lax.all_to_all(pc_, LAYER_AX, split_axis=0, concat_axis=0)
-        pv_ = lax.all_to_all(pv_, LAYER_AX, split_axis=0, concat_axis=0)
-        pn_ = lax.all_to_all(pn_[:, None], LAYER_AX, split_axis=0, concat_axis=0)[:, 0]
-        # Merge-Fiber (Alg. 2 line 6): sort-free merge of l received pieces
-        parts = [
-            SparseCOO(pr_[k], pc_[k], pv_[k], pn_[k], (tm_a, piece_w))
-            for k in range(l)
-        ]
-        c_tile, ovf_merge = merge_sparse(
-            parts, caps.c_cap, semiring, assume_sorted=sorted_merge
+    def step(a_t: DistSparse, b_t: DistSparse, *rest):
+        bok = rest[0] if rest else None
+        c_tile, ovf = _sparse_tile_body(
+            _squeeze_tile(a_t), _squeeze_tile(b_t), l, caps, semiring,
+            sorted_merge, kbin=kbin, bin_of_k=bok,
         )
-        ovf = ovf_mul + ovf_split + ovf_merge
-        ovf_global = lax.pmax(lax.pmax(lax.pmax(ovf, ROW_AX), COL_AX), LAYER_AX)
         return (
             c_tile.rows[None, None, None],
             c_tile.cols[None, None, None],
             c_tile.vals[None, None, None],
             c_tile.nnz[None, None, None],
-            ovf_global,
+            _pmax_grid(ovf),
         )
 
     spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
     spec0 = jax.sharding.PartitionSpec()
-    in_specs = (
-        DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
-                   shape=a.shape, tile_shape=a.tile_shape,
-                   grid_shape=a.grid_shape, kind=a.kind),
-        DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
-                   shape=b_batch.shape, tile_shape=b_batch.tile_shape,
-                   grid_shape=b_batch.grid_shape, kind=b_batch.kind),
-    )
+    in_specs = [_dist_spec(a, spec3), _dist_spec(b_batch, spec3)]
+    args = [a, b_batch]
+    if kbin is not None:
+        in_specs.append(spec0)  # bin map: replicated
+        args.append(bin_of_k)
     fn = shard_map(
-        step, mesh=grid.mesh, in_specs=in_specs,
+        step, mesh=grid.mesh, in_specs=tuple(in_specs),
         out_specs=(spec3, spec3, spec3, spec3, spec0),
         check_vma=False,
     )
-    rows, cols, vals, nnz, ovf = fn(a, b_batch)
+    rows, cols, vals, nnz, ovf = fn(*args)
     m, n = a.shape
     c = DistSparse(
         rows=rows, cols=cols, vals=vals, nnz=nnz,
         shape=(m, b_batch.shape[1]),
+        tile_shape=(tm_a, piece_w),
+        grid_shape=a.grid_shape,
+        kind="C",
+    )
+    return c, ovf
+
+
+# ---------------------------------------------------------------------------
+# Fused per-batch step (selection + multiply in ONE shard_map)
+# ---------------------------------------------------------------------------
+def summa3d_fused_step(
+    a: DistSparse,
+    b_full: DistSparse,
+    batch,
+    bin_of_k: Array = None,
+    *,
+    grid: Grid,
+    num_batches: int,
+    sel_cap: int,
+    caps: BatchCaps = None,
+    semiring: sr.Semiring = sr.PLUS_TIMES,
+    sorted_merge: bool = True,
+    path: str = "sparse",
+    kbin: BinnedCaps = None,
+):
+    """Batch-select + SUMMA3D multiply fused into one SPMD step (Alg. 4
+    line 5-6 without the host in the loop).
+
+    ``batch`` stays a traced scalar, so ONE executable serves every batch —
+    the driver can dispatch batch i+1 while batch i is still computing
+    (async dispatch), and the selected B block never round-trips through a
+    separate jit boundary. Returns ``(c_batch, ovf)`` where ``ovf`` is an
+    i32[2] device array ``[selection_overflow, multiply_overflow]`` — the
+    driver keeps it device-resident and only syncs when it drains its
+    pipeline window.
+    """
+    tm_a, _ = a.tile_shape
+    tn_full = b_full.tile_shape[1]
+    assert tn_full % num_batches == 0, (tn_full, num_batches)
+    wb = tn_full // num_batches
+    l = grid.l
+    assert wb % l == 0
+    piece_w = wb // l
+    if path == "dense":
+        assert semiring.add_kind == "sum", "dense path requires a sum monoid"
+
+    def step(a_t: DistSparse, b_t: DistSparse, batch_, *rest):
+        bok = rest[0] if rest else None
+        a_loc = _squeeze_tile(a_t)
+        b_loc = _squeeze_tile(b_t)
+        # Batch-Select (Alg. 4 line 5): block-cyclic column selection
+        sel, ovf_sel = b_loc.select_cols_blockcyclic(
+            batch_, num_batches, l, new_cap=sel_cap
+        )
+        ovf_sel = _pmax_grid(ovf_sel)
+        if path == "dense":
+            a_cat = _gather_A(a_loc)
+            b_cat = _gather_B(sel)
+            d_tile = spmm(a_cat, b_cat.to_dense(), semiring)
+            c_tile = lax.psum_scatter(
+                d_tile, LAYER_AX, scatter_dimension=1, tiled=True
+            )
+            return c_tile[None, None, None], jnp.stack([ovf_sel, jnp.int32(0)])
+        c_tile, ovf_mul = _sparse_tile_body(
+            a_loc, sel, l, caps, semiring, sorted_merge,
+            kbin=kbin, bin_of_k=bok,
+        )
+        return (
+            c_tile.rows[None, None, None],
+            c_tile.cols[None, None, None],
+            c_tile.vals[None, None, None],
+            c_tile.nnz[None, None, None],
+            jnp.stack([ovf_sel, _pmax_grid(ovf_mul)]),
+        )
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    spec0 = jax.sharding.PartitionSpec()
+    in_specs = [_dist_spec(a, spec3), _dist_spec(b_full, spec3), spec0]
+    args = [a, b_full, jnp.int32(batch)]
+    if kbin is not None:
+        in_specs.append(spec0)
+        args.append(bin_of_k)
+    if path == "dense":
+        out_specs = (spec3, spec0)
+    else:
+        out_specs = (spec3, spec3, spec3, spec3, spec0)
+    fn = shard_map(
+        step, mesh=grid.mesh, in_specs=tuple(in_specs), out_specs=out_specs,
+        check_vma=False,
+    )
+    if path == "dense":
+        c_tiles, ovf = fn(*args)
+        return c_tiles, ovf
+    rows, cols, vals, nnz, ovf = fn(*args)
+    m, _ = a.shape
+    c = DistSparse(
+        rows=rows, cols=cols, vals=vals, nnz=nnz,
+        shape=(m, b_full.shape[1] // num_batches),
         tile_shape=(tm_a, piece_w),
         grid_shape=a.grid_shape,
         kind="C",

@@ -107,6 +107,24 @@ def batching_plan_columns(n: int, num_batches: int, num_layers: int) -> int:
     return b
 
 
+def fold_block_cyclic(
+    percol: np.ndarray, num_batches: int, num_layers: int
+) -> np.ndarray:
+    """Fold per-local-column vectors (..., n) into per-(batch, piece) sums.
+
+    The block-cyclic split (paper Fig. 1(i)) divides n local columns into
+    ``num_batches * num_layers`` blocks of width w = n/(b·l); block t belongs
+    to batch ``t % b`` and fiber piece ``t // b``. Returns an array of shape
+    (..., num_batches, num_layers) — the host-side math behind both the
+    per-batch flops capacities and the exact per-batch selection counts.
+    """
+    *lead, n = percol.shape
+    w = n // (num_batches * num_layers)
+    assert w * num_batches * num_layers == n, (n, num_batches, num_layers)
+    blocks = percol.reshape(*lead, num_layers, num_batches, w).sum(axis=-1)
+    return np.swapaxes(blocks, -1, -2)  # (..., batch, piece)
+
+
 @dataclasses.dataclass(frozen=True)
 class KBinPlan:
     """Host-side plan for the k-binned paired kernel (all python ints).

@@ -23,7 +23,7 @@ from . import ref
 from .densify import densify_pallas
 from .sort_engine import sort_pairs as _sort_pairs
 from .spgemm_acc import spgemm_paired_pallas
-from .spgemm_binned import bin_entries_by_k, spgemm_paired_binned_pallas
+from .spgemm_binned import spgemm_binned_dense
 from .spmm import spmm_pallas
 
 _ON_TPU = jax.default_backend() == "tpu"
@@ -94,23 +94,11 @@ def spgemm_paired_binned(
     assert k == k2
     av = jnp.where(a.valid_mask(), a.vals, 0)
     bv = jnp.where(b.valid_mask(), b.vals, 0)
-    ak_b, ar_b, av_b, ovf_a = bin_entries_by_k(
-        a.cols, a.rows, av, a.valid_mask(), k, num_bins, bin_cap_a,
-        fill_k=-1, fill_other=m, bin_map=bin_map,
+    return spgemm_binned_dense(
+        a.rows, a.cols, av, a.valid_mask(), b.rows, b.cols, bv, b.valid_mask(),
+        m, n, k, num_bins, bin_cap_a, bin_cap_b, bin_map=bin_map,
+        use_pallas=use_pallas, interpret=interpret,
     )
-    bk_b, bc_b, bv_b, ovf_b = bin_entries_by_k(
-        b.rows, b.cols, bv, b.valid_mask(), k, num_bins, bin_cap_b,
-        fill_k=-2, fill_other=n, bin_map=bin_map,
-    )
-    if use_pallas:
-        out = spgemm_paired_binned_pallas(
-            ar_b, ak_b, av_b, bk_b, bc_b, bv_b, m, n, interpret=interpret
-        )
-    else:
-        out = ref.spgemm_paired_binned_ref(
-            ar_b, ak_b, av_b, bk_b, bc_b, bv_b, m, n
-        )
-    return out, ovf_a + ovf_b
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret"))

@@ -160,6 +160,41 @@ def spgemm_paired_binned_pallas(
     return out[:m, :n]
 
 
+def spgemm_binned_dense(
+    a_rows, a_cols, a_vals, valid_a, b_rows, b_cols, b_vals, valid_b,
+    m: int, n: int, k_dim: int, num_bins: int, bin_cap_a: int, bin_cap_b: int,
+    bin_map=None, use_pallas: bool = False, interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Bin both COO operands by contraction index and evaluate the paired
+    kernel on matching bins only: the one bin→pair→accumulate sequence shared
+    by the jitted wrapper (``kernels.ops.spgemm_paired_binned``) and the
+    distributed local multiply (``core.local_spgemm.spgemm_kbinned``).
+
+    Returns (dense C (m, n) f32, bin-capacity overflow count). A's entries
+    arrive as (row, k=col, val), B's as (k=row, col, val); callers supply the
+    validity masks (gathered operands carry sentinel-k padding beyond nnz).
+    """
+    ak_b, ar_b, av_b, ovf_a = bin_entries_by_k(
+        a_cols, a_rows, a_vals, valid_a, k_dim, num_bins, bin_cap_a,
+        fill_k=-1, fill_other=m, bin_map=bin_map,
+    )
+    bk_b, bc_b, bv_b, ovf_b = bin_entries_by_k(
+        b_rows, b_cols, b_vals, valid_b, k_dim, num_bins, bin_cap_b,
+        fill_k=-2, fill_other=n, bin_map=bin_map,
+    )
+    if use_pallas:
+        out = spgemm_paired_binned_pallas(
+            ar_b, ak_b, av_b, bk_b, bc_b, bv_b, m, n, interpret=interpret
+        )
+    else:
+        from . import ref
+
+        out = ref.spgemm_paired_binned_ref(
+            ar_b, ak_b, av_b, bk_b, bc_b, bv_b, m, n
+        )
+    return out, ovf_a + ovf_b
+
+
 def pairing_counts(
     cap_a: int, cap_b: int, num_bins: int, bin_cap_a: int, bin_cap_b: int
 ) -> dict:

@@ -252,6 +252,163 @@ def case_overflow_retry():
     print(f"OK overflow_retry (retries={res.num_retries})")
 
 
+def _collect_batches(path):
+    """Consumer capturing each batch's raw tiles for exact cross-driver
+    comparison (pipelined vs serial must be the same program)."""
+    store = {}
+
+    def consumer(bi, c_batch, col_map):
+        if path == "dense":
+            store[bi] = (np.asarray(c_batch),)
+        else:
+            store[bi] = (
+                np.asarray(c_batch.rows), np.asarray(c_batch.cols),
+                np.asarray(c_batch.vals), np.asarray(c_batch.nnz),
+            )
+        return bi
+
+    return store, consumer
+
+
+def _run_driver_pair(A, B, grid, path, semiring, nb, **kw):
+    """Run pipelined + serial drivers, assert identical per-batch output."""
+    stores = {}
+    for pipelined in (True, False):
+        store, consumer = _collect_batches(path)
+        res = batched_summa3d(
+            A, B, grid, per_process_memory=1 << 30, consumer=consumer,
+            path=path, semiring=semiring, force_num_batches=nb,
+            pipelined=pipelined, **kw,
+        )
+        assert res.consumed == list(range(res.plan.num_batches))
+        stores[pipelined] = store
+    assert stores[True].keys() == stores[False].keys()
+    for bi in stores[True]:
+        for x, y in zip(stores[True][bi], stores[False][bi]):
+            np.testing.assert_array_equal(x, y)
+    return stores[True]
+
+
+def case_pipelined_serial_parity():
+    """Pipelined scheduler == serial scheduler, batch for batch, over
+    {PLUS_TIMES, MIN_PLUS} x {sparse, dense path} x {1, multi}-batch plans
+    (dense path requires a sum monoid, so MIN_PLUS runs sparse-only)."""
+    grid = make_grid(2, 2, 2)
+    n = 32
+    xa, a = _rand_square(n, 0.25, seed=83)
+    xb, b = _rand_square(n, 0.25, seed=89)
+    A = scatter_to_grid(a, grid, "A")
+    B = scatter_to_grid(b, grid, "B")
+    for nb in (1, 4):
+        for path in ("sparse", "dense"):
+            batches = _run_driver_pair(A, B, grid, path, sr.PLUS_TIMES, nb)
+            # PLUS_TIMES also checks against the dense reference
+            acc = np.zeros((n, n), np.float32)
+            for bi, tiles in batches.items():
+                col_map = batch_column_map(n, grid, nb, bi)
+                if path == "dense":
+                    acc += reconstruct_dense_c(tiles[0], grid, col_map, n, n)
+                else:
+                    c = DistSparse(
+                        rows=tiles[0], cols=tiles[1], vals=tiles[2],
+                        nnz=tiles[3], shape=(n, n // nb),
+                        tile_shape=(n // 2, n // 2 // nb // 2),
+                        grid_shape=(2, 2, 2), kind="C",
+                    )
+                    acc += reconstruct_sparse_c(c, grid, col_map, n, n)
+            np.testing.assert_allclose(acc, xa @ xb, rtol=1e-4, atol=1e-5)
+        _run_driver_pair(A, B, grid, "sparse", sr.MIN_PLUS, nb)
+    # MIN_PLUS correctness vs the tropical dense reference (single batch)
+    batches = _run_driver_pair(A, B, grid, "sparse", sr.MIN_PLUS, 1)
+    ai = np.where(xa != 0, xa, np.inf)
+    bi_ = np.where(xb != 0, xb, np.inf)
+    ref = (ai[:, :, None] + bi_[None, :, :]).min(axis=1)
+    got = np.full((n, n), np.inf, np.float32)
+    col_map = batch_column_map(n, grid, 1, 0)
+    rows, cols, vals, nnzs = batches[0]
+    tm, wbl = n // 2, n // 4
+    for i in range(2):
+        for j in range(2):
+            for k in range(2):
+                cnt = int(nnzs[i, j, k])
+                gr = i * tm + rows[i, j, k, :cnt]
+                gc = col_map[j, k][cols[i, j, k, :cnt]]
+                got[gr, gc] = vals[i, j, k, :cnt]
+    finite = np.isfinite(ref)
+    np.testing.assert_allclose(got[finite], ref[finite], rtol=1e-5, atol=1e-6)
+    assert not np.isfinite(got[~finite]).any()
+    print("OK pipelined_serial_parity")
+
+
+def case_binned_sparse_path():
+    """Plan-driven k-binned local multiply == ESC on a skewed (R-MAT)
+    workload, with strictly fewer pairings evaluated."""
+    grid = make_grid(2, 2, 2)
+    n = 64
+    a = gen.rmat(scale=6, edge_factor=6, seed=91)
+    b = gen.rmat(scale=6, edge_factor=6, seed=97)
+    xa = np.asarray(a.to_dense())
+    xb = np.asarray(b.to_dense())
+    A = scatter_to_grid(a, grid, "A")
+    B = scatter_to_grid(b, grid, "B")
+    accs = {}
+    for binned in (True, False):
+        acc = np.zeros((n, n), np.float32)
+
+        def consumer(bi, c_batch, col_map, acc=acc):
+            acc += reconstruct_sparse_c(c_batch, grid, col_map, n, n)
+
+        res = batched_summa3d(
+            A, B, grid, per_process_memory=1 << 30, consumer=consumer,
+            path="sparse", force_num_batches=2, binned=binned,
+        )
+        assert res.binned == binned, (res.binned, binned)
+        np.testing.assert_allclose(acc, xa @ xb, rtol=1e-4, atol=1e-4)
+        accs[binned] = acc
+    np.testing.assert_allclose(accs[True], accs[False], rtol=1e-5, atol=1e-5)
+    plan = res.plan
+    assert plan.kbin.pairings < plan.kbin.pairings_unbinned, plan.kbin
+    # auto mode must pick the binned path on this plan
+    res_auto = batched_summa3d(
+        A, B, grid, per_process_memory=1 << 30,
+        consumer=lambda bi, c, m: None, path="sparse", force_num_batches=2,
+    )
+    assert res_auto.binned
+    print(
+        f"OK binned_sparse_path (pairings {plan.kbin.pairings} < "
+        f"{plan.kbin.pairings_unbinned}, bins={plan.kbin.num_bins})"
+    )
+
+
+def case_pipelined_overflow_retry():
+    """Beaten capacities in the pipelined schedule must drop to the
+    synchronous retry loop and still converge — on both local-multiply
+    engines — and stay batch-identical to the serial schedule."""
+    grid = make_grid(2, 2, 2)
+    n = 32
+    xa, a = _rand_square(n, 0.4, seed=101)
+    xb, b = _rand_square(n, 0.4, seed=103)
+    A = scatter_to_grid(a, grid, "A")
+    B = scatter_to_grid(b, grid, "B")
+    for binned in (False, True):
+        acc = np.zeros((n, n), np.float32)
+
+        def consumer(bi, c_batch, col_map, acc=acc):
+            acc += reconstruct_sparse_c(c_batch, grid, col_map, n, n)
+
+        res = batched_summa3d(
+            A, B, grid, per_process_memory=1 << 30, consumer=consumer,
+            path="sparse", slack=0.05, force_num_batches=2, max_retries=8,
+            pipelined=True, binned=binned,
+        )
+        np.testing.assert_allclose(acc, xa @ xb, rtol=1e-4, atol=1e-4)
+        assert res.num_retries > 0, f"binned={binned} hit no retries"
+    _run_driver_pair(
+        A, B, grid, "sparse", sr.PLUS_TIMES, 2, slack=0.05, max_retries=8
+    )
+    print(f"OK pipelined_overflow_retry (retries={res.num_retries})")
+
+
 def case_rectangular_aat():
     """AA^T on a kmer-like rectangular matrix (paper §V-G, BELLA use case)."""
     grid = make_grid(2, 2, 2)

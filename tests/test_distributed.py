@@ -22,6 +22,9 @@ CASES = [
     "symbolic_driven_batching",
     "semiring_or_and",
     "overflow_retry",
+    "pipelined_serial_parity",
+    "binned_sparse_path",
+    "pipelined_overflow_retry",
     "rectangular_aat",
     "ring_schedule_matches",
 ]

@@ -95,6 +95,30 @@ class TestColumnOps:
             np.asarray(b1.to_dense()), x[:, [2, 3, 6, 7]]
         )
 
+    def test_split_col_blocks_matches_select_loop(self, rng):
+        x = dense_random(rng, 10, 12, 0.5)
+        a = sp.from_dense(jnp.asarray(x), cap=96).sort_rowmajor()
+        for num_pieces, piece_cap in ((3, 32), (4, 32), (12, 8)):
+            rows, cols, vals, nnz, ovf = a.split_col_blocks(num_pieces, piece_cap)
+            assert int(ovf) == 0
+            piece_w = 12 // num_pieces
+            for k in range(num_pieces):
+                ref, ref_ovf = a.select_col_block(k * piece_w, piece_w, piece_cap)
+                assert int(ref_ovf) == 0
+                np.testing.assert_array_equal(np.asarray(rows[k]), np.asarray(ref.rows))
+                np.testing.assert_array_equal(np.asarray(cols[k]), np.asarray(ref.cols))
+                np.testing.assert_array_equal(np.asarray(vals[k]), np.asarray(ref.vals))
+                assert int(nnz[k]) == int(ref.nnz)
+
+    def test_split_col_blocks_overflow(self, rng):
+        x = dense_random(rng, 8, 8, 0.9)
+        a = sp.from_dense(jnp.asarray(x), cap=64)
+        total = int(a.nnz)
+        rows, cols, vals, nnz, ovf = a.split_col_blocks(2, 4)
+        assert int(nnz.sum()) + int(ovf) == total
+        assert int(ovf) > 0
+        assert int(nnz.max()) <= 4
+
     def test_counts(self, rng):
         x = dense_random(rng, 15, 9, 0.3)
         a = sp.from_dense(jnp.asarray(x), cap=100)
