@@ -6,7 +6,6 @@ qualitative Table VI trends:
     b↑ (fixed l): A-broadcast total bytes ↑ linearly (A re-gathered per batch)
     l↑ (fixed b): gather bytes ↓ (smaller row/col groups), fiber a2a bytes ↑
 """
-import numpy as np
 
 import jax
 
@@ -14,9 +13,8 @@ from repro.core import gen
 from repro.core.batched import batched_summa3d
 from repro.core.distsparse import scatter_to_grid
 from repro.core.grid import make_grid
-from repro.launch import hlo_analysis
 
-from .common import emit, time_jit
+from .common import emit
 
 
 def run(n: int = 64, nnz_per_row: int = 5) -> None:

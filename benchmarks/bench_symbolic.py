@@ -8,7 +8,7 @@ local compute is trivial.
 import jax
 
 from repro.core import gen
-from repro.core.batched import plan_batches, symbolic3d
+from repro.core.batched import symbolic3d
 from repro.core.distsparse import scatter_to_grid
 from repro.core.grid import make_grid
 from repro.core.summa3d import BatchCaps, summa3d_sparse_step

@@ -1,0 +1,84 @@
+"""Validate the checked-in BENCH_*.json artifacts against the shared schema.
+
+Every perf suite (``benchmarks.run --suite local|summa3d|mcl``) writes a JSON
+payload with the same envelope, so stale or hand-edited artifacts are caught
+mechanically (a CI step runs this after the bench smoke):
+
+    top level: {"suite": str, "backend": str, "platform": str, "rows": [...]}
+    every row: {"op": str, "variant": str, "wall_ms": int|float, ...}
+
+Usage::
+
+    python -m benchmarks.check_bench_json [paths...]
+
+With no arguments, validates every BENCH_*.json at the repo root. Exits
+nonzero (listing every violation) if any artifact is malformed.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+TOP_KEYS = ("suite", "backend", "platform", "rows")
+ROW_KEYS = ("op", "variant", "wall_ms")
+
+
+def check_payload(payload: object, name: str = "<payload>") -> list:
+    """Schema errors for one parsed artifact (empty list = valid)."""
+    errors = []
+    if not isinstance(payload, dict):
+        return [f"{name}: top level must be an object, got {type(payload).__name__}"]
+    for key in TOP_KEYS:
+        if key not in payload:
+            errors.append(f"{name}: missing top-level key '{key}'")
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errors.append(f"{name}: 'rows' must be a non-empty list")
+        return errors
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"{name}: rows[{i}] is not an object")
+            continue
+        for key in ROW_KEYS:
+            if key not in row:
+                errors.append(f"{name}: rows[{i}] missing '{key}' (op={row.get('op')!r})")
+        wall = row.get("wall_ms")
+        if wall is not None and not isinstance(wall, (int, float)):
+            errors.append(f"{name}: rows[{i}].wall_ms not a number: {wall!r}")
+        elif isinstance(wall, (int, float)) and wall < 0:
+            errors.append(f"{name}: rows[{i}].wall_ms negative: {wall!r}")
+    return errors
+
+
+def check_file(path: pathlib.Path) -> list:
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable/unparsable ({e})"]
+    return check_payload(payload, path.name)
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    paths = [pathlib.Path(p) for p in argv] or sorted(
+        REPO_ROOT.glob("BENCH_*.json")
+    )
+    if not paths:
+        print("no BENCH_*.json artifacts found", file=sys.stderr)
+        return 1
+    errors = []
+    for p in paths:
+        errors.extend(check_file(p))
+    for e in errors:
+        print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print(f"ok: {len(paths)} artifact(s) valid "
+              f"({', '.join(p.name for p in paths)})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,7 +15,11 @@ GFLOP/s per row — so the perf trajectory is tracked from PR to PR.
 ``--suite summa3d`` runs the end-to-end batched driver suite (pipelined vs
 serial schedule, binned vs ESC local multiply) and writes
 ``BENCH_summa3d.json``, refreshing ``BENCH_local_kernels.json`` in the same
-run so both perf files stay in lockstep.
+run so both perf files stay in lockstep. ``--suite mcl`` runs the
+device-resident vs host-loop MCL comparison (per-iteration wall-ms and
+host-transfer bytes) and writes ``BENCH_mcl.json``. Every BENCH_*.json
+artifact validates against the shared row schema via
+``python -m benchmarks.check_bench_json`` (enforced in CI).
 """
 import argparse
 import json
@@ -85,9 +89,28 @@ def run_summa3d(json_path: pathlib.Path) -> None:
     run_local(REPO_ROOT / "BENCH_local_kernels.json")
 
 
+def run_mcl(json_path: pathlib.Path) -> None:
+    import jax
+
+    from . import bench_mcl
+
+    print("name,us_per_call,derived")
+    rows = bench_mcl.run_mcl_suite()
+    payload = {
+        "suite": "mcl_pipeline",
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "rows": rows,
+    }
+    json_path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {json_path}", file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--suite", choices=("all", "local", "summa3d"), default="all")
+    ap.add_argument(
+        "--suite", choices=("all", "local", "summa3d", "mcl"), default="all"
+    )
     ap.add_argument(
         "--json-out",
         default=None,
@@ -102,6 +125,8 @@ def main() -> None:
         run_summa3d(pathlib.Path(
             args.json_out or REPO_ROOT / "BENCH_summa3d.json"
         ))
+    elif args.suite == "mcl":
+        run_mcl(pathlib.Path(args.json_out or REPO_ROOT / "BENCH_mcl.json"))
     else:
         run_all()
 

@@ -1,7 +1,7 @@
 """--arch <id> registry: full configs, smoke configs, shapes, input specs."""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

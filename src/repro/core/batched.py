@@ -26,8 +26,15 @@ communicators once symbolic planning is done):
      overflow flags, which stay device-resident; under async dispatch the
      next batch's selection and gathers overlap the previous multiply, and
      the consumer's host-side work overlaps device compute.
-  4. The consumer callback sees each C batch and may prune/store/discard it
-     (HipMCL-style usage, §V-C) — C is never materialized whole unless asked.
+  4. A device-side ``postprocess`` hook transforms each batch product
+     IMMEDIATELY after the fused step, before any host involvement — the
+     HipMCL integration (§V-C): MCL fuses inflation + distributed column
+     normalization + top-k pruning here, so the raw product never reaches
+     the host. The host ``consumer`` then sees the hook's output (or the raw
+     batch when no hook is set) and may store/discard it — C is never
+     materialized whole unless asked. ``plan_batches(reserved_bytes=...)``
+     lets such consumers charge their kept outputs against the per-process
+     budget (memory-constrained consumption).
 
 Overflow robustness: if a static capacity is exceeded (sparsity estimate
 beaten by correlation structure), the flags come back nonzero and the driver
@@ -41,7 +48,7 @@ from __future__ import annotations
 import dataclasses
 from collections import deque
 from functools import partial
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,7 +57,7 @@ from jax import lax
 
 from . import semiring as sr
 from ..compat import shard_map
-from .distsparse import DistSparse
+from .distsparse import DistSparse, dist_spec
 from .grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from .summa3d import (
     BatchCaps,
@@ -67,6 +74,7 @@ from .symbolic import (
     batching_plan_columns,
     fold_block_cyclic,
     plan_k_bins,
+    rup8 as _rup8,
 )
 
 # cached compiles: one per (grid, caps, semiring, tile-shape) combination —
@@ -155,12 +163,7 @@ def _symbolic3d_jit(a: DistSparse, b: DistSparse, grid: Grid):
         )
 
     spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
-    in_specs = tuple(
-        DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
-                   shape=d.shape, tile_shape=d.tile_shape,
-                   grid_shape=d.grid_shape, kind=d.kind)
-        for d in (a, b)
-    )
+    in_specs = tuple(dist_spec(d, spec3) for d in (a, b))
     fn = shard_map(
         step, mesh=grid.mesh, in_specs=in_specs,
         out_specs=(spec3, spec3, spec3, spec3),
@@ -232,8 +235,22 @@ def plan_batches(
     r_bytes: int = 12,
     slack: float = 1.3,
     force_num_batches: Optional[int] = None,
+    reserved_bytes: int = 0,
 ) -> BatchPlan:
-    """Run the symbolic step and derive b + static capacities (host math)."""
+    """Run the symbolic step and derive b + static capacities (host math).
+
+    ``reserved_bytes`` is subtracted from the per-process budget before the
+    Alg. 3 batch count: memory the caller has already committed per process
+    to the CONSUMED outputs (e.g. the pruned batches a memory-constrained MCL
+    iteration keeps on-device for the next iterate, §V-C) — so the budget
+    honors what actually lives alongside the unmerged batch results.
+    """
+    if reserved_bytes >= per_process_memory:
+        raise MemoryError(
+            f"reserved output bytes ({reserved_bytes}) exceed per-process "
+            f"memory ({per_process_memory})"
+        )
+    per_process_memory = per_process_memory - reserved_bytes
     counts = symbolic3d_counts(a, b, grid)
     percol = counts.percol  # (pr, pc, l, tn_b)
     pr, pc, l, tn_b = percol.shape
@@ -308,10 +325,6 @@ def plan_batches(
     )
 
 
-def _rup8(x: int) -> int:
-    return ((x + 7) // 8) * 8
-
-
 def batch_column_map(n: int, grid: Grid, num_batches: int, batch: int) -> np.ndarray:
     """Global columns covered by ``batch``, in C-tile order.
 
@@ -366,6 +379,8 @@ def batched_summa3d(
     pipelined: bool = True,
     lookahead: int = 2,
     binned: object = "auto",
+    postprocess: Optional[Callable[[int, object], object]] = None,
+    reserved_bytes: int = 0,
 ) -> BatchedResult:
     """Multiply A·B in batches; the consumer sees each batch then it's freed.
 
@@ -373,6 +388,18 @@ def batched_summa3d(
     DistSparse (path="sparse") or stacked dense tiles (path="dense").
     ``sorted_merge`` selects the segmented (merge-not-sort) Merge-Fiber in
     the per-batch sparse step.
+
+    ``postprocess(batch_idx, c_batch) -> c_batch'`` is the DEVICE-side
+    per-batch hook (HipMCL integration, §V-C): a jitted transform applied to
+    the raw batch product immediately after the fused SPMD step and BEFORE
+    the host consumer — under the pipelined schedule it is dispatched
+    together with the batch, so e.g. inflation+normalize+prune run on-grid
+    while later batches are still multiplying, and only the postprocessed
+    batch is ever offered to the host. The consumer then receives the hook's
+    return value (which may be any pytree, e.g. ``(pruned, stats)``) in place
+    of the raw batch. On an overflow retry the hook re-runs on the retried
+    product. ``reserved_bytes`` flows into ``plan_batches``: per-process
+    memory already committed to the consumed outputs.
 
     ``pipelined=True`` (default) runs the Alg. 4 loop as a lookahead window:
     batch i+1..i+lookahead are dispatched before batch i's device-resident
@@ -389,7 +416,7 @@ def batched_summa3d(
     """
     plan = plan_batches(
         a, b, grid, per_process_memory, r_bytes=r_bytes, slack=slack,
-        force_num_batches=force_num_batches,
+        force_num_batches=force_num_batches, reserved_bytes=reserved_bytes,
     )
     nb = plan.num_batches
     n_cols = b.shape[1]
@@ -449,25 +476,32 @@ def batched_summa3d(
 
     consumed = []
 
-    def finish(bi: int, c_batch, ovf) -> None:
+    def post(bi: int, c_batch):
+        """Apply the device-side hook (async — nothing blocks here)."""
+        return postprocess(bi, c_batch) if postprocess is not None else c_batch
+
+    def finish(bi: int, c_post, ovf) -> None:
         """Sync point: read batch bi's flags, retry if beaten, consume."""
         nonlocal retries
         o = np.asarray(ovf)
         if o.any():
             retries += 1
-            c_batch = run_batch_sync(bi, *grow(o, caps, sel_cap, kb))
+            # the speculatively postprocessed batch was built from a garbage
+            # product — recompute synchronously and re-run the hook on it
+            c_post = post(bi, run_batch_sync(bi, *grow(o, caps, sel_cap, kb)))
         col_map = batch_column_map(n_cols, grid, nb, bi)
-        consumed.append(consumer(bi, c_batch, col_map))
+        consumed.append(consumer(bi, c_post, col_map))
 
     if not pipelined:
         for bi in range(nb):
-            c_batch = run_batch_sync(bi, caps, sel_cap, kb)
+            c_batch = post(bi, run_batch_sync(bi, caps, sel_cap, kb))
             col_map = batch_column_map(n_cols, grid, nb, bi)
             consumed.append(consumer(bi, c_batch, col_map))
     else:
         inflight = deque()
         for bi in range(nb):
-            inflight.append((bi,) + tuple(dispatch(bi, caps, sel_cap, kb)))
+            c_batch, ovf = dispatch(bi, caps, sel_cap, kb)
+            inflight.append((bi, post(bi, c_batch), ovf))
             if len(inflight) > lookahead:
                 finish(*inflight.popleft())
         while inflight:

@@ -16,6 +16,14 @@ where w = n_rows/pr (= n_cols/pc; square layer grids). Contraction alignment
 (verified by tests): A tile (i,s,k) covers global columns
 s·w + k·(w/l) + [0,w/l), and B tile (s,j,k) covers the same global rows —
 so per-layer 2D SUMMA contracts stage-s tiles directly.
+
+Column-reduction helpers (device-resident MCL, paper §V-C): a global column
+of an A/C-kind matrix lives in the pr tiles of one (j, k) grid column, and a
+B-kind column spans the pr×l tiles of one grid column — so per-column
+sums/maxima are one local segment reduction plus a ``psum``/``pmax`` over
+the owning mesh axes, never a host gather. ``local_col_reduce`` is the
+inside-``shard_map`` building block (used by the fused MCL postprocess);
+``dist_col_reduce`` is the standalone jitted wrapper over a ``DistSparse``.
 """
 from __future__ import annotations
 
@@ -26,8 +34,10 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
-from .grid import Grid
+from ..compat import shard_map
+from .grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from .sparse import SparseCOO, from_numpy_coo
 
 Array = jnp.ndarray
@@ -62,6 +72,16 @@ class DistSparse:
             self.nnz[i, j, k],
             self.tile_shape,
         )
+
+
+def dist_spec(d: DistSparse, spec) -> DistSparse:
+    """The ``shard_map`` in_specs/out_specs pytree for one ``DistSparse``:
+    every data field carries ``spec``, the meta fields are copied. Single
+    construction site — used by summa3d, the symbolic step, and the MCL
+    postprocess, so a new data field only has to be threaded here."""
+    return DistSparse(rows=spec, cols=spec, vals=spec, nnz=spec,
+                      shape=d.shape, tile_shape=d.tile_shape,
+                      grid_shape=d.grid_shape, kind=d.kind)
 
 
 def tile_shape_for(kind: str, shape: Tuple[int, int], grid: Grid) -> Tuple[int, int]:
@@ -176,3 +196,83 @@ def gather_to_global(d: DistSparse) -> SparseCOO:
 
         return empty((m, n), cap=8)
     return from_numpy_coo(rows, cols, vals, (m, n))
+
+
+# ---------------------------------------------------------------------------
+# Distributed column reductions (device-resident MCL building blocks)
+# ---------------------------------------------------------------------------
+def col_reduce_axes(kind: str) -> Tuple[str, ...]:
+    """Mesh axes a per-LOCAL-column reduction must be combined over so every
+    process reads the reduction of the full GLOBAL column it holds a piece of.
+
+    A/C-kind: a global column is owned by one (grid column, layer) pair and
+    split across the pr row blocks → reduce over the row axis. B-kind: a
+    global column spans the whole pr×l fiber plane of its grid column.
+    """
+    if kind in ("A", "C"):
+        return (ROW_AX,)
+    if kind == "B":
+        return (ROW_AX, LAYER_AX)
+    raise ValueError(kind)
+
+
+def local_col_reduce(
+    vals: Array, cols: Array, valid: Array, tn: int, op: str = "sum",
+    axes: Tuple[str, ...] = (ROW_AX,),
+) -> Array:
+    """Inside-``shard_map`` per-column reduction: segment-reduce ``vals`` by
+    local column, then combine over ``axes`` (``psum`` for sum, ``pmax`` for
+    max). Returns f32[tn], replicated along the reduced axes. ``op="max"``
+    treats empty columns as 0 (MCL values are nonnegative)."""
+    segids = jnp.where(valid, cols, tn)
+    v = jnp.where(valid, vals, 0.0)
+    if op == "sum":
+        out = jax.ops.segment_sum(v, segids, num_segments=tn + 1)[:tn]
+        for ax in axes:
+            out = lax.psum(out, ax)
+    elif op == "max":
+        out = jax.ops.segment_max(v, segids, num_segments=tn + 1)[:tn]
+        out = jnp.where(jnp.isfinite(out), out, 0.0)  # empty segments -> -inf
+        for ax in axes:
+            out = lax.pmax(out, ax)
+    else:
+        raise ValueError(op)
+    return out
+
+
+@partial(jax.jit, static_argnames=("grid", "op"))
+def dist_col_reduce(d: DistSparse, grid: Grid, op: str = "sum") -> Array:
+    """Per-GLOBAL-column reduction of a ``DistSparse``, computed on-grid.
+
+    Returns a (pr, pc, l, tn) stacked array: entry [i, j, k, c] is the
+    reduction (sum or max of values) over the full global column that local
+    column ``c`` of tile (i, j, k) belongs to — replicated along the mesh
+    axes the reduction ran over (``col_reduce_axes``). No host transfer.
+
+    This is the STANDALONE wrapper (one shard_map per call) for callers and
+    tests that need a column reduction outside an existing SPMD step; the
+    MCL batch postprocess inlines ``local_col_reduce`` inside its own
+    shard_map instead, so normalization fuses with the prune.
+    """
+    _, tn = d.tile_shape
+    axes = col_reduce_axes(d.kind)
+
+    def step(d_t: DistSparse) -> Array:
+        t = SparseCOO(
+            d_t.rows.reshape(-1), d_t.cols.reshape(-1), d_t.vals.reshape(-1),
+            d_t.nnz.reshape(()), d.tile_shape,
+        )
+        out = local_col_reduce(
+            t.vals.astype(jnp.float32), t.cols, t.valid_mask(), tn, op, axes
+        )
+        return out[None, None, None]
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    fn = shard_map(step, mesh=grid.mesh, in_specs=(dist_spec(d, spec3),),
+                   out_specs=spec3, check_vma=False)
+    return fn(d)
+
+
+def dist_col_sums(d: DistSparse, grid: Grid) -> Array:
+    """Distributed column sums — see ``dist_col_reduce``."""
+    return dist_col_reduce(d, grid, op="sum")

@@ -32,6 +32,13 @@ one executable serves every batch, and the pipelined driver
 (``batched.batched_summa3d``) dispatches batch i+1 while batch i computes,
 reading the device-resident overflow flags only when it drains its window.
 
+``reassemble_operands`` closes the loop for iterated multiplies (MCL-style
+A ← f(A·A), §V-C): the batched C outputs are redistributed into fresh A-kind
+and B-kind operands entirely on the grid — the A route is a pure local
+column remap (C is distributed like A, layer-aligned), the B route one
+partitioned layer split + ``all_to_all`` — so an application iterate never
+round-trips through ``gather_to_global``/``scatter_to_grid``.
+
 Sentinel discipline: before gathering, every device rewrites its padding
 entries to the *global* contraction sentinel (k_tot) so offset arithmetic
 cannot alias padding onto real coordinates; values are zero as a second
@@ -49,10 +56,10 @@ from jax import lax
 
 from . import semiring as sr
 from ..compat import axis_size, shard_map
-from .distsparse import DistSparse
+from .distsparse import DistSparse, dist_spec
 from .grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from .local_spgemm import spgemm_esc, spgemm_kbinned, spmm, merge_sparse
-from .sparse import SparseCOO
+from .sparse import SparseCOO, concat as sparse_concat
 
 Array = jnp.ndarray
 
@@ -323,13 +330,6 @@ def _sparse_tile_body(
     return c_tile, ovf_mul + ovf_split + ovf_merge
 
 
-def _dist_spec(d: DistSparse, spec3) -> DistSparse:
-    """The in_specs pytree for one DistSparse operand."""
-    return DistSparse(rows=spec3, cols=spec3, vals=spec3, nnz=spec3,
-                      shape=d.shape, tile_shape=d.tile_shape,
-                      grid_shape=d.grid_shape, kind=d.kind)
-
-
 def summa3d_sparse_step(
     a: DistSparse, b_batch: DistSparse, grid: Grid, caps: BatchCaps,
     semiring: sr.Semiring = sr.PLUS_TIMES,
@@ -372,7 +372,7 @@ def summa3d_sparse_step(
 
     spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
     spec0 = jax.sharding.PartitionSpec()
-    in_specs = [_dist_spec(a, spec3), _dist_spec(b_batch, spec3)]
+    in_specs = [dist_spec(a, spec3), dist_spec(b_batch, spec3)]
     args = [a, b_batch]
     if kbin is not None:
         in_specs.append(spec0)  # bin map: replicated
@@ -464,7 +464,7 @@ def summa3d_fused_step(
 
     spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
     spec0 = jax.sharding.PartitionSpec()
-    in_specs = [_dist_spec(a, spec3), _dist_spec(b_full, spec3), spec0]
+    in_specs = [dist_spec(a, spec3), dist_spec(b_full, spec3), spec0]
     args = [a, b_full, jnp.int32(batch)]
     if kbin is not None:
         in_specs.append(spec0)
@@ -490,3 +490,110 @@ def summa3d_fused_step(
         kind="C",
     )
     return c, ovf
+
+
+# ---------------------------------------------------------------------------
+# On-grid operand reassembly (device-resident iteration, paper §V-C)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("grid", "cap_a", "cap_b"))
+def reassemble_operands(
+    c_batches, grid: Grid, cap_a: int, cap_b: int
+) -> Tuple[DistSparse, DistSparse, Array]:
+    """Turn the batched C outputs of one multiply into the next iteration's
+    A-kind and B-kind operands WITHOUT leaving the device grid.
+
+    ``c_batches`` is the (tuple of) per-batch C ``DistSparse`` results of
+    ``batched_summa3d`` (kind "C", tile (tm, wb/l)) — e.g. the pruned batches
+    of an MCL expansion. Batch bi's local column c of tile (i, j, k) is
+    global column j·w + (k·nb + bi)·wbl + c (``batch_column_map``), which
+    lands in row block i / column block j of BOTH target distributions — so
+    reassembly is fiber-local: a partitioned layer split (reusing
+    ``SparseCOO.split_col_blocks``) + one ``all_to_all`` over the layer axis
+    per operand, plus local index remapping. One jitted SPMD step, no
+    ``gather_to_global``/``scatter_to_grid`` round-trip.
+
+    Requires the square layout the paper (and MCL) uses: m == n, pr == pc.
+    Returns ``(a_next, b_next, overflow)`` where overflow counts entries
+    dropped because ``cap_a``/``cap_b`` (static per-tile capacities) were
+    exceeded — with capacities at the post-prune hard bound it is always 0.
+    """
+    c_batches = tuple(c_batches)
+    nb = len(c_batches)
+    c0 = c_batches[0]
+    pr, pc, l = c0.grid_shape
+    tm, wbl = c0.tile_shape
+    m = c0.shape[0]
+    w = wbl * l * nb  # full column-block width = n/pc
+    n = w * pc
+    assert m == n and pr == pc, (
+        f"on-grid reassembly requires the square layout, got m={m} n={n} "
+        f"grid {pr}x{pc}x{l}"
+    )
+    wl = w // l  # per-layer slice width (A cols / B rows)
+
+    def step(*c_ts):
+        k_ax = lax.axis_index(LAYER_AX)
+        tiles = [_squeeze_tile(t) for t in c_ts]
+        # concatenate the nb batch tiles into one entry list over the FULL
+        # local column block [0, w): batch bi local col c -> (k·nb + bi)·wbl + c.
+        # Padding is rewritten to explicit sentinels so every slot can be
+        # declared live for the split below.
+        rows_l, offs_l, vals_l = [], [], []
+        for bi, t in enumerate(tiles):
+            valid = t.valid_mask()
+            rows_l.append(jnp.where(valid, t.rows, tm))
+            offs_l.append(
+                jnp.where(valid, (k_ax * nb + bi) * wbl + t.cols, w)
+            )
+            vals_l.append(jnp.where(valid, t.vals, 0))
+        rows = jnp.concatenate(rows_l)
+        offs = jnp.concatenate(offs_l)
+        vals = jnp.concatenate(vals_l)
+        cap_tot = rows.shape[0]
+
+        # ---- A-kind route: layer k's batch offsets span exactly
+        # [k·wl, (k+1)·wl) (the batch_column_map algebra), so every entry's
+        # destination layer EQUALS its source layer — no fiber exchange at
+        # all, just the local per-batch column remap (off - k·wl = bi·wbl+c)
+        # and one nb-way concat/compact.
+        a_parts = [
+            SparseCOO(t.rows, bi * wbl + t.cols, t.vals, t.nnz, (tm, wl))
+            for bi, t in enumerate(tiles)
+        ]
+        a_tile, ovf_a2 = sparse_concat(a_parts, cap_a)
+
+        # ---- B-kind route: destination layer = row // wl (split on rows by
+        # transposing the roles: split_col_blocks keys on .cols)
+        ent_b = SparseCOO(offs, rows, vals, jnp.int32(cap_tot), (w, tm))
+        br, bc, bv, bn, ovf_b = ent_b.split_col_blocks(l, cap_b)
+        br = lax.all_to_all(br, LAYER_AX, split_axis=0, concat_axis=0)
+        bc = lax.all_to_all(bc, LAYER_AX, split_axis=0, concat_axis=0)
+        bv = lax.all_to_all(bv, LAYER_AX, split_axis=0, concat_axis=0)
+        bn = lax.all_to_all(bn[:, None], LAYER_AX, split_axis=0, concat_axis=0)[:, 0]
+        # received pieces carry (rows=global-block col offset, cols=local B row)
+        b_parts = [SparseCOO(bc[k], br[k], bv[k], bn[k], (wl, w)) for k in range(l)]
+        b_tile, ovf_b2 = sparse_concat(b_parts, cap_b)
+
+        ovf = _pmax_grid(ovf_a2 + ovf_b + ovf_b2)
+        return (
+            a_tile.rows[None, None, None], a_tile.cols[None, None, None],
+            a_tile.vals[None, None, None], a_tile.nnz[None, None, None],
+            b_tile.rows[None, None, None], b_tile.cols[None, None, None],
+            b_tile.vals[None, None, None], b_tile.nnz[None, None, None],
+            ovf,
+        )
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    spec0 = jax.sharding.PartitionSpec()
+    fn = shard_map(
+        step, mesh=grid.mesh,
+        in_specs=tuple(dist_spec(c, spec3) for c in c_batches),
+        out_specs=(spec3,) * 8 + (spec0,),
+        check_vma=False,
+    )
+    ar, ac, av, an, br, bc, bv, bn, ovf = fn(*c_batches)
+    a_next = DistSparse(rows=ar, cols=ac, vals=av, nnz=an, shape=(m, n),
+                        tile_shape=(tm, wl), grid_shape=(pr, pc, l), kind="A")
+    b_next = DistSparse(rows=br, cols=bc, vals=bv, nnz=bn, shape=(m, n),
+                        tile_shape=(wl, w), grid_shape=(pr, pc, l), kind="B")
+    return a_next, b_next, ovf

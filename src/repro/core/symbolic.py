@@ -172,8 +172,8 @@ def plan_k_bins(
         binned_b = np.zeros(g, np.int64)
         np.add.at(binned_a, bin_of_k, a_cnt)
         np.add.at(binned_b, bin_of_k, b_cnt)
-        ca = _rup8(max(int(binned_a.max() * slack), 8))
-        cb = _rup8(max(int(binned_b.max() * slack), 8))
+        ca = rup8(max(int(binned_a.max() * slack), 8))
+        cb = rup8(max(int(binned_b.max() * slack), 8))
         return g * ca * cb, ca, cb
 
     weight = a_cnt + b_cnt
@@ -202,7 +202,8 @@ def plan_k_bins(
     )
 
 
-def _rup8(x: int) -> int:
+def rup8(x: int) -> int:
+    """Round up to a multiple of 8 (static-capacity alignment)."""
     return ((x + 7) // 8) * 8
 
 

@@ -13,11 +13,10 @@ the same (step -> global batch) contract.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Array = jnp.ndarray
 

@@ -4,15 +4,25 @@ HipMCL consumes every SpGEMM batch with column-wise selection (paper §V-C:
 "keeps top-k entries in each column"). The TPU-native realization avoids
 per-column sorting: an iterative per-column threshold refinement (bisection
 on value) runs entirely in VMEM on a dense batch block and emits, per
-column, the largest threshold t such that |{i : x[i,c] >= t}| <= k. The
-caller then keeps entries >= t — a masked select, no sort.
+column, the bisection bracket (lo, hi): hi is the smallest tested threshold
+with |{i : x[i,c] >= hi}| <= k, lo the largest with count > k. The caller
+keeps entries >= hi — a masked select, no sort — and breaks k-boundary TIES
+from the [lo, hi) band by rank (``sparse_apps.mcl``), since a value repeated
+across the boundary would otherwise be pruned entirely.
 
 Grid: (n_tiles,) over column tiles; each program bisects THRESH_ITERS times
 on its (m × n_blk) block (VPU reductions only).
+
+Wired into the MCL pipeline (``sparse_apps.mcl``): the dense-path batch
+postprocess row-gathers each column block and runs this kernel for the
+per-column thresholds; the sparse path runs the same bisection distributed
+(per-column counts ``psum``-reduced over the grid row axis) as a masked
+select on the COO entries. TPU follow-ups: compile/validate outside
+interpret mode (the fast lane runs ``interpret=True`` on CPU, including
+inside ``shard_map``), and fuse the threshold + masked-select into one
+kernel so the survivors never re-visit HBM.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -38,13 +48,17 @@ def _col_prune_kernel(x_ref, k_ref, out_ref):
         return lo, hi
 
     lo, hi = jax.lax.fori_loop(0, THRESH_ITERS, body, (lo, hi))
-    out_ref[...] = hi  # smallest threshold with count <= k
+    out_ref[...] = jnp.stack([lo, hi])  # bracket: count(>=hi) <= k < count(>=lo)
 
 
-def col_topk_threshold_pallas(
+def col_topk_bounds_pallas(
     x: jnp.ndarray, k: int, *, n_blk: int = 128, interpret: bool = True
-) -> jnp.ndarray:
-    """Per-column |value| threshold keeping at most k entries. x: (m, n)."""
+):
+    """Per-column bisection bracket ``(lo, hi)`` for top-k |value| selection.
+
+    ``hi`` keeps at most k entries (``|x| >= hi``); values in ``[lo, hi)``
+    are the k-boundary tie band (empty when no tie straddles k). x: (m, n).
+    """
     m, n = x.shape
     n_blk = min(n_blk, _rup(n, 128))
     n_pad = _rup(n, n_blk)
@@ -57,11 +71,18 @@ def col_topk_threshold_pallas(
             pl.BlockSpec((m, n_blk), lambda j: (0, j)),
             pl.BlockSpec((1,), lambda j: (0,)),
         ],
-        out_specs=pl.BlockSpec((n_blk,), lambda j: (j,)),
-        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        out_specs=pl.BlockSpec((2, n_blk), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((2, n_pad), jnp.float32),
         interpret=interpret,
     )(xp, karr)
-    return out[:n]
+    return out[0, :n], out[1, :n]
+
+
+def col_topk_threshold_pallas(
+    x: jnp.ndarray, k: int, *, n_blk: int = 128, interpret: bool = True
+) -> jnp.ndarray:
+    """Per-column |value| threshold keeping at most k entries. x: (m, n)."""
+    return col_topk_bounds_pallas(x, k, n_blk=n_blk, interpret=interpret)[1]
 
 
 def col_topk_threshold_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:

@@ -26,7 +26,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 #: Largest pair count sorted on-chip: 2 i32/f32 arrays × a few network copies

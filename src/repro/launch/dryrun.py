@@ -27,11 +27,9 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import ARCHS, SHAPES, WORKLOADS, get_config, input_specs
 from ..models import transformer as tfm
-from ..models.common import batch_axes
 from ..optim import adamw
 from ..train.step import (
     TrainConfig,
@@ -229,7 +227,6 @@ def run_lm_cell(arch: str, shape_name: str, multi_pod: bool,
 def run_spgemm_cell(name: str, multi_pod: bool) -> Dict:
     """Lower one batched-SUMMA3D step of the paper's workload on the
     production mesh (grid = data×model×pod per DESIGN.md §5)."""
-    from ..core.batched import _sparse_jit
     from ..core.distsparse import DistSparse
     from ..core.grid import grid_from_mesh
     from ..core.summa3d import BatchCaps

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Tuple
+from typing import Dict
 
 # TPU v5e hardware constants (per chip) — assignment-specified
 PEAK_FLOPS = 197e12  # bf16

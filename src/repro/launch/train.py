@@ -12,7 +12,6 @@ checkpointing.
 from __future__ import annotations
 
 import argparse
-import os
 
 
 def main() -> int:
@@ -43,7 +42,7 @@ def main() -> int:
     from ..compat import AxisType, make_mesh, set_mesh
 
     from ..configs import get_config
-    from ..data import DataConfig, Prefetcher, synthetic_batch
+    from ..data import DataConfig, synthetic_batch
     from ..models import transformer as tfm
     from ..optim import adamw
     from ..runtime import RuntimeConfig, run_training

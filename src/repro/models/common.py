@@ -7,7 +7,6 @@ those into NamedShardings for pjit.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Dict, Optional, Tuple
 

@@ -8,7 +8,7 @@ lets the 20B arch fit the v5e HBM budget in the dry-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

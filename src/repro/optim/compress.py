@@ -15,7 +15,7 @@ this trades flops for an α–β win when density << link_bw/HBM_bw.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

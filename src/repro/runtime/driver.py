@@ -20,7 +20,6 @@ import logging
 import time
 from typing import Any, Callable, Dict, Optional
 
-import jax
 import numpy as np
 
 from ..checkpoint import store

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

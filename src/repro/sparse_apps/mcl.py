@@ -5,21 +5,61 @@ power + column normalization), then pruning (threshold + per-column top-k).
 The batched multiply lets the expansion run even when nnz(A²) exceeds
 memory: each column batch is pruned IMMEDIATELY after it is produced and
 only the pruned entries survive — exactly the paper's integration.
+
+``mcl_iterate`` is the DEVICE-RESIDENT pipeline: the per-batch
+inflate+normalize+prune runs as a ``batched_summa3d`` postprocess hook (one
+jitted SPMD step per batch — column sums/maxima are ``psum``/``pmax``
+reductions over the grid, top-k is a distributed threshold bisection on the
+sparse path and the ``kernels.col_prune`` Pallas bisection on the dense
+path), the pruned batches are reassembled into the next iteration's A/B
+operands ON the grid (``summa3d.reassemble_operands`` — a layer all-to-all,
+no ``gather_to_global``/``scatter_to_grid`` inside the loop), and chaos is a
+distributed per-column max/sumsq reduction read back as one scalar per
+batch. The pruned-output capacities feed back into ``plan_batches`` via
+``reserved_bytes`` so ``MCLConfig.per_process_memory`` bounds operands +
+unmerged batch + kept pruned output together.
+
+``mcl_iterate_host`` is the kept host-loop reference (gathers every batch,
+prunes in numpy, re-scatters each iteration) — the parity baseline for tests
+and the host-transfer comparison in ``benchmarks.bench_mcl``.
+
+Usage (device-resident loop)::
+
+    from repro.core.grid import make_grid
+    from repro.sparse_apps.mcl import MCLConfig, mcl_iterate, clusters_from_matrix
+
+    grid = make_grid(2, 2, 2)            # 8 devices: 2x2 layers x 2
+    a = ...  # column-stochastic SparseCOO adjacency (n x n)
+    final, history = mcl_iterate(a, grid, MCLConfig(
+        inflation=2.0, max_per_col=64, per_process_memory=1 << 26))
+    labels = clusters_from_matrix(final.rows[:final.nnz],
+                                  final.cols[:final.nnz], a.shape[0])
+
+``history[i]["host_bytes"]`` records the host<->device traffic of iteration
+i — a few stat scalars on the device-resident path vs. the full matrix every
+batch on the host reference.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+from functools import partial
 from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
-from ..core import semiring as sr
+from ..compat import shard_map
+from ..core import distsparse
 from ..core.batched import batched_summa3d
-from ..core.distsparse import DistSparse, gather_to_global, scatter_to_grid
-from ..core.grid import Grid
+from ..core.distsparse import DistSparse, dist_spec, local_col_reduce
+from ..core.grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from ..core.sparse import SparseCOO, from_numpy_coo
+from ..core.summa3d import _pmax_grid, _squeeze_tile, reassemble_operands
+from ..core.symbolic import rup8 as _rup8
+from ..kernels.col_prune import THRESH_ITERS, col_topk_bounds_pallas
 
 
 @dataclasses.dataclass
@@ -31,8 +71,48 @@ class MCLConfig:
     converge_tol: float = 1e-3
     per_process_memory: int = 1 << 26
     path: str = "sparse"
+    force_num_batches: Optional[int] = None  # None: symbolic-step planning
+    lookahead: int = 2  # pipelined driver window
+    r_bytes: int = 12  # bytes per stored nonzero (COO: i32+i32+f32)
 
 
+# ---------------------------------------------------------------------------
+# Host<->device transfer accounting (benchmark instrumentation)
+# ---------------------------------------------------------------------------
+_TRANSFER_BYTES = [0]
+
+
+def reset_transfer_bytes() -> None:
+    _TRANSFER_BYTES[0] = 0
+
+
+def transfer_bytes() -> int:
+    """Host<->device bytes moved by MCL code since the last reset."""
+    return _TRANSFER_BYTES[0]
+
+
+def _to_host(x) -> np.ndarray:
+    """Device -> host read with byte accounting."""
+    a = np.asarray(x)
+    _TRANSFER_BYTES[0] += a.nbytes
+    return a
+
+
+def _dist_bytes(d: DistSparse) -> int:
+    return d.rows.nbytes + d.cols.nbytes + d.vals.nbytes + d.nnz.nbytes
+
+
+def _scatter(a: SparseCOO, grid: Grid, kind: str) -> DistSparse:
+    """Host -> device scatter with byte accounting (module indirection so
+    tests can count/forbid scatter calls inside the iteration loop)."""
+    d = distsparse.scatter_to_grid(a, grid, kind)
+    _TRANSFER_BYTES[0] += _dist_bytes(d)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Host reference pruning math (kept: parity oracle for the device pipeline)
+# ---------------------------------------------------------------------------
 def _col_normalize_np(rows, cols, vals, n):
     sums = np.zeros(n, vals.dtype)
     np.add.at(sums, cols, vals)
@@ -55,41 +135,378 @@ def _prune_topk_np(rows, cols, vals, n, thresh, k):
     return rows[keep], cols[keep], vals[keep]
 
 
+def _record_iter(history, it, nnz, chaos, res, t0, t0_bytes, verbose):
+    """Shared per-iteration epilogue: one history row schema for all three
+    loop variants (device sparse / device dense / host reference) so the
+    bench and parity consumers can zip them together."""
+    history.append({
+        "iter": it, "nnz": nnz, "chaos": chaos,
+        "batches": res.plan.num_batches, "flops": res.plan.total_flops,
+        "host_bytes": transfer_bytes() - t0_bytes,
+        "wall_ms": (time.perf_counter() - t0) * 1e3,
+    })
+    if verbose:
+        print(f"[mcl] iter={it} nnz={nnz} chaos={chaos:.5f} "
+              f"b={res.plan.num_batches}")
+
+
+# ---------------------------------------------------------------------------
+# Device-side per-batch postprocess (the fused §V-C consumption step)
+# ---------------------------------------------------------------------------
+@partial(
+    jax.jit,
+    static_argnames=("grid", "inflation", "thresh", "k", "new_cap"),
+)
+def _mcl_prune_sparse(
+    c: DistSparse, grid: Grid, inflation: float, thresh: float, k: int,
+    new_cap: int,
+):
+    """Inflate + column-normalize + prune one sparse C batch ON the grid.
+
+    One SPMD step per batch (dispatched by the driver's postprocess hook, so
+    it overlaps later batches under the pipelined schedule):
+
+      1. inflation: entrywise power (local).
+      2. column normalization: column sums are a segment-sum + ``psum`` over
+         the grid row axis (a batch column lives in the pr tiles of one
+         (grid column, layer) pair — ``distsparse.local_col_reduce``).
+      3. top-k: distributed threshold bisection (the sparse masked-select
+         realization of ``kernels.col_prune``) — per-column counts are
+         ``psum``-reduced each step, so the k-th value is found across all
+         row blocks without moving entries; combined with the absolute
+         ``thresh`` cut, then one ``compact`` to the pruned capacity.
+      4. renormalize survivors; chaos (max per-column max - sumsq) and the
+         kept-entry count come back as replicated device scalars.
+
+    Returns ``(pruned DistSparse, stats)`` with stats device-resident:
+    ``{"chaos": f32[], "nnz": i32[], "overflow": i32[]}``.
+    """
+    tm, tn = c.tile_shape
+
+    def step(c_t: DistSparse):
+        t = _squeeze_tile(c_t)
+        valid = t.valid_mask()
+        v = jnp.where(valid, t.vals.astype(jnp.float32), 0.0)
+        v = v ** inflation
+        # column normalization over the grid row group
+        colsum = local_col_reduce(v, t.cols, valid, tn, "sum", (ROW_AX,))
+        inv = 1.0 / jnp.where(colsum > 0, colsum, 1.0)
+        inv_pad = jnp.concatenate([inv, jnp.ones((1,), jnp.float32)])
+        segids = jnp.where(valid, t.cols, tn)
+        v = v * inv_pad[segids]
+        # distributed per-column top-k threshold (bisection on value)
+        colmax = local_col_reduce(v, t.cols, valid, tn, "max", (ROW_AX,))
+        hi = colmax + 1e-6
+        lo = jnp.zeros_like(hi)
+
+        def body(_, lohi):
+            lo_, hi_ = lohi
+            mid = 0.5 * (lo_ + hi_)
+            mid_pad = jnp.concatenate([mid, jnp.zeros((1,), jnp.float32)])
+            over = valid & (v >= mid_pad[segids])
+            cnt = local_col_reduce(
+                over.astype(jnp.float32), t.cols, valid, tn, "sum", (ROW_AX,)
+            )
+            take_hi = cnt > k
+            return (
+                jnp.where(take_hi, mid, lo_),
+                jnp.where(take_hi, hi_, mid),
+            )
+
+        lo_f, tcol = lax.fori_loop(0, THRESH_ITERS, body, (lo, hi))
+        tcol_pad = jnp.concatenate([tcol, jnp.full((1,), jnp.inf, jnp.float32)])
+        lo_pad = jnp.concatenate([lo_f, jnp.full((1,), jnp.inf, jnp.float32)])
+        # k-boundary ties: a value repeated across the k-th position sits in
+        # the final bracket [lo, tcol) — "v >= tcol" alone would drop the
+        # WHOLE tied group (annihilating uniform columns, where every entry
+        # ties). HipMCL keeps exactly k: take all strictly-greater entries,
+        # then fill the remaining slots from the tie band by rank — local
+        # rank within the tile plus an all-gathered per-row-block offset, so
+        # the quota is allocated consistently across the grid row group.
+        greater = valid & (v >= thresh) & (v >= tcol_pad[segids])
+        cnt_hi = local_col_reduce(
+            greater.astype(jnp.float32), t.cols, valid, tn, "sum", (ROW_AX,)
+        ).astype(jnp.int32)
+        slots = jnp.maximum(k - cnt_hi, 0)  # (tn,) free slots per column
+        tied = (
+            valid & (v >= thresh) & (v >= lo_pad[segids])
+            & (v < tcol_pad[segids])
+        )
+        # within-column rank of the tied entries (slot order), O(cap) memory:
+        # one stable two-key sort groups tied entries by column, the rank is
+        # the position within the column run, scattered back to entry slots —
+        # no (cap, tn) scratch in the memory-constrained hot path.
+        cap = v.shape[0]
+        idx = jnp.arange(cap, dtype=jnp.int32)
+        sort_seg = jnp.where(tied, segids, tn)  # non-tied group last
+        seg_sorted, perm = lax.sort((sort_seg, idx), num_keys=2)
+        pos = jnp.arange(cap, dtype=jnp.int32)
+        is_first = jnp.concatenate([
+            jnp.ones((1,), bool), seg_sorted[1:] != seg_sorted[:-1]
+        ])
+        run_start = lax.cummax(jnp.where(is_first, pos, 0))
+        rank = jnp.zeros((cap,), jnp.int32).at[perm].set(pos - run_start)
+        tied_cnt = jax.ops.segment_sum(
+            tied.astype(jnp.int32), segids, num_segments=tn + 1
+        )[:tn]
+        all_cnt = lax.all_gather(tied_cnt, ROW_AX)  # (pr, tn)
+        i_own = lax.axis_index(ROW_AX)
+        offset = jnp.sum(
+            jnp.where(
+                jnp.arange(all_cnt.shape[0], dtype=jnp.int32)[:, None] < i_own,
+                all_cnt, 0,
+            ),
+            axis=0,
+        )
+        quota = jnp.clip(slots - offset, 0, None)
+        quota_pad = jnp.concatenate([quota, jnp.zeros((1,), jnp.int32)])
+        keep = greater | (tied & (rank < quota_pad[segids]))
+        # renormalize the survivors
+        vk = jnp.where(keep, v, 0.0)
+        colsum2 = local_col_reduce(vk, t.cols, valid, tn, "sum", (ROW_AX,))
+        inv2 = 1.0 / jnp.where(colsum2 > 0, colsum2, 1.0)
+        inv2_pad = jnp.concatenate([inv2, jnp.ones((1,), jnp.float32)])
+        v2 = vk * inv2_pad[segids]
+        # chaos = max over columns of (col max - col sum of squares)
+        colmax2 = local_col_reduce(v2, t.cols, keep, tn, "max", (ROW_AX,))
+        colsq2 = local_col_reduce(v2 * v2, t.cols, keep, tn, "sum", (ROW_AX,))
+        chaos = _pmax_grid(jnp.max(colmax2 - colsq2))
+        nnz = lax.psum(
+            lax.psum(
+                lax.psum(jnp.sum(keep.astype(jnp.int32)), ROW_AX), COL_AX
+            ),
+            LAYER_AX,
+        )
+        pruned, ovf = SparseCOO(t.rows, t.cols, v2, t.nnz, (tm, tn)).compact(
+            keep, new_cap
+        )
+        return (
+            pruned.rows[None, None, None],
+            pruned.cols[None, None, None],
+            pruned.vals[None, None, None],
+            pruned.nnz[None, None, None],
+            chaos,
+            nnz,
+            _pmax_grid(ovf),
+        )
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    spec0 = jax.sharding.PartitionSpec()
+    fn = shard_map(step, mesh=grid.mesh, in_specs=(dist_spec(c, spec3),),
+                   out_specs=(spec3,) * 4 + (spec0,) * 3, check_vma=False)
+    rows, cols, vals, nnz, chaos, total, ovf = fn(c)
+    pruned = DistSparse(rows=rows, cols=cols, vals=vals, nnz=nnz,
+                        shape=c.shape, tile_shape=c.tile_shape,
+                        grid_shape=c.grid_shape, kind=c.kind)
+    return pruned, {"chaos": chaos, "nnz": total, "overflow": ovf}
+
+
+@partial(jax.jit, static_argnames=("grid", "inflation", "thresh", "k"))
+def _mcl_prune_dense(c_tiles, grid: Grid, inflation: float, thresh: float, k: int):
+    """Dense-path batch postprocess: inflate + normalize + top-k prune the
+    stacked (pr, pc, l, tm, wbl) C tiles on-device. The per-column top-k
+    threshold comes from the ``kernels.col_prune`` Pallas bisection on the
+    row-gathered column block (the batch column is split across the pr row
+    tiles, so the kernel sees the full column). Returns (pruned tiles, stats).
+    """
+    interpret = jax.default_backend() != "tpu"
+
+    def step(x):
+        t = x.reshape(x.shape[-2:]).astype(jnp.float32)  # (tm, wbl)
+        tm = t.shape[0]
+        t = t ** inflation
+        colsum = lax.psum(jnp.sum(t, axis=0), ROW_AX)
+        t = t / jnp.where(colsum > 0, colsum, 1.0)[None, :]
+        full = lax.all_gather(t, ROW_AX).reshape(-1, t.shape[1])
+        lo, thr = col_topk_bounds_pallas(full, k, interpret=interpret)
+        # keep all strictly-greater entries, then fill the remaining top-k
+        # slots from the [lo, thr) tie band by rank (a value repeated across
+        # the k boundary would otherwise be pruned entirely); the full
+        # column is gathered here, so the rank fill is local.
+        greater = (full >= thr[None, :]) & (full >= thresh)
+        tied = (full >= lo[None, :]) & (full < thr[None, :]) & (full >= thresh)
+        slots = (k - jnp.sum(greater.astype(jnp.int32), axis=0))
+        rank = jnp.cumsum(tied.astype(jnp.int32), axis=0) - tied
+        keep_full = greater | (tied & (rank < slots[None, :]))
+        i_own = lax.axis_index(ROW_AX)
+        keep = lax.dynamic_slice_in_dim(keep_full, i_own * tm, tm, axis=0)
+        t = jnp.where(keep, t, 0.0)
+        colsum2 = lax.psum(jnp.sum(t, axis=0), ROW_AX)
+        t = t / jnp.where(colsum2 > 0, colsum2, 1.0)[None, :]
+        colmax = lax.pmax(jnp.max(t, axis=0), ROW_AX)
+        colsq = lax.psum(jnp.sum(t * t, axis=0), ROW_AX)
+        chaos = _pmax_grid(jnp.max(colmax - colsq))
+        nnz = lax.psum(
+            lax.psum(
+                lax.psum(jnp.sum((t > 0).astype(jnp.int32)), ROW_AX), COL_AX
+            ),
+            LAYER_AX,
+        )
+        return t[None, None, None], chaos, nnz
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    spec0 = jax.sharding.PartitionSpec()
+    fn = shard_map(step, mesh=grid.mesh, in_specs=(spec3,),
+                   out_specs=(spec3, spec0, spec0), check_vma=False)
+    tiles, chaos, nnz = fn(c_tiles)
+    return tiles, {"chaos": chaos, "nnz": nnz, "overflow": jnp.int32(0)}
+
+
+def _extract_dense_batch(tiles: np.ndarray, col_map: np.ndarray):
+    """Vectorized host extraction of one dense batch: one ``np.nonzero``
+    over the stacked tiles instead of a pr×pc×l Python tile loop."""
+    pr, pc, l, tm, wbl = tiles.shape
+    i, j, kk, r, c = np.nonzero(tiles)
+    return i * tm + r, col_map[j, kk, c], tiles[i, j, kk, r, c]
+
+
+# ---------------------------------------------------------------------------
+# Device-resident MCL loop
+# ---------------------------------------------------------------------------
 def mcl_iterate(
     a: SparseCOO, grid: Grid, cfg: MCLConfig, verbose: bool = False
 ) -> Tuple[SparseCOO, List[dict]]:
     """Run MCL until convergence; returns (final matrix, per-iter stats).
 
-    The expansion consumes each SpGEMM batch with inflation+prune before the
-    next batch is formed (memory-constrained consumption)."""
+    Device-resident: the input is scattered ONCE, every iteration's
+    expansion+inflation+normalization+pruning runs on the grid, the pruned
+    batches become the next A/B operands via an on-grid reassembly, and only
+    per-batch stat scalars (chaos, nnz) cross to the host until the final
+    matrix is gathered after convergence. ``cfg.path="dense"`` runs the
+    dense-accumulator expansion with the Pallas ``col_prune`` postprocess
+    (host reassembly per iteration — the small-scale reference
+    configuration).
+    """
+    if cfg.path == "dense":
+        return _mcl_iterate_dense(a, grid, cfg, verbose)
+    n = a.shape[0]
+    tm = n // grid.pr
+    w = n // grid.pc
+    wl = w // grid.l
+    k = cfg.max_per_col
+    # post-prune hard bounds: <= min(k, rows-in-tile) entries per column
+    cap_a = _rup8(max(8, min(k, tm) * wl))
+    cap_b = _rup8(max(8, min(k, wl) * w))
+    reserved = cfg.r_bytes * (cap_a + cap_b)
+    A = _scatter(a, grid, "A")
+    B = _scatter(a, grid, "B")
+    history: List[dict] = []
+    for it in range(cfg.max_iters):
+        t0_bytes = transfer_bytes()
+        t0 = time.perf_counter()
+        batches: List[DistSparse] = []
+        stats: List[dict] = []
+
+        def postprocess(bi, c_batch):
+            tn = c_batch.tile_shape[1]
+            new_cap = _rup8(max(8, min(min(k, tm) * tn, c_batch.cap)))
+            return _mcl_prune_sparse(
+                c_batch, grid=grid, inflation=cfg.inflation,
+                thresh=cfg.prune_threshold, k=k, new_cap=new_cap,
+            )
+
+        def consumer(bi, payload, col_map):
+            pruned, st = payload
+            batches.append(pruned)
+            stats.append(st)
+            return None
+
+        res = batched_summa3d(
+            A, B, grid,
+            per_process_memory=cfg.per_process_memory,
+            consumer=consumer, path="sparse",
+            postprocess=postprocess, reserved_bytes=reserved,
+            force_num_batches=cfg.force_num_batches,
+            lookahead=cfg.lookahead, r_bytes=cfg.r_bytes,
+        )
+        A, B, ovf = reassemble_operands(tuple(batches), grid, cap_a, cap_b)
+        # ONE host sync per iteration, scalars only (convergence check)
+        chaos = max(float(_to_host(st["chaos"])) for st in stats)
+        nnz = sum(int(_to_host(st["nnz"])) for st in stats)
+        overflow = int(_to_host(ovf)) + sum(
+            int(_to_host(st["overflow"])) for st in stats
+        )
+        assert overflow == 0, f"iter {it}: pruned-capacity overflow {overflow}"
+        _record_iter(history, it, nnz, chaos, res, t0, t0_bytes, verbose)
+        if chaos < cfg.converge_tol:
+            break
+    final = distsparse.gather_to_global(A)
+    _TRANSFER_BYTES[0] += _dist_bytes(A)
+    return final, history
+
+
+def _mcl_iterate_dense(
+    a: SparseCOO, grid: Grid, cfg: MCLConfig, verbose: bool = False
+) -> Tuple[SparseCOO, List[dict]]:
+    """Dense-path loop: device postprocess (col_prune kernel), vectorized
+    host extraction, host reassembly + re-scatter per iteration."""
     n = a.shape[0]
     cur = a
-    history = []
+    history: List[dict] = []
     for it in range(cfg.max_iters):
-        A = scatter_to_grid(cur, grid, "A")
-        B = scatter_to_grid(cur, grid, "B")
+        t0_bytes = transfer_bytes()
+        t0 = time.perf_counter()
+        A = _scatter(cur, grid, "A")
+        B = _scatter(cur, grid, "B")
+        pieces = []
+        stats: List[dict] = []
+
+        def postprocess(bi, c_tiles):
+            return _mcl_prune_dense(
+                c_tiles, grid=grid, inflation=cfg.inflation,
+                thresh=cfg.prune_threshold, k=cfg.max_per_col,
+            )
+
+        def consumer(bi, payload, col_map):
+            tiles, st = payload
+            stats.append(st)
+            pieces.append(_extract_dense_batch(_to_host(tiles), col_map))
+            return None
+
+        res = batched_summa3d(
+            A, B, grid,
+            per_process_memory=cfg.per_process_memory,
+            consumer=consumer, path="dense", postprocess=postprocess,
+            force_num_batches=cfg.force_num_batches,
+            lookahead=cfg.lookahead, r_bytes=cfg.r_bytes,
+        )
+        rows = np.concatenate([p[0] for p in pieces])
+        cols = np.concatenate([p[1] for p in pieces])
+        vals = np.concatenate([p[2] for p in pieces]).astype(np.float32)
+        cur = from_numpy_coo(rows, cols, vals, (n, n), cap=max(len(rows), 8))
+        chaos = max(float(_to_host(st["chaos"])) for st in stats)
+        nnz = sum(int(_to_host(st["nnz"])) for st in stats)
+        _record_iter(history, it, nnz, chaos, res, t0, t0_bytes, verbose)
+        if chaos < cfg.converge_tol:
+            break
+    return cur, history
+
+
+# ---------------------------------------------------------------------------
+# Host-loop reference (the kept pre-device implementation)
+# ---------------------------------------------------------------------------
+def mcl_iterate_host(
+    a: SparseCOO, grid: Grid, cfg: MCLConfig, verbose: bool = False
+) -> Tuple[SparseCOO, List[dict]]:
+    """Host-loop MCL reference: every batch is pulled to numpy, inflation /
+    normalization / pruning / chaos all run on the host, and the iterate
+    round-trips host<->device each iteration. Kept as the parity oracle and
+    the host-transfer baseline for ``benchmarks.bench_mcl``."""
+    n = a.shape[0]
+    cur = a
+    history: List[dict] = []
+    for it in range(cfg.max_iters):
+        t0_bytes = transfer_bytes()
+        t0 = time.perf_counter()
+        A = _scatter(cur, grid, "A")
+        B = _scatter(cur, grid, "B")
         pieces = []
 
         def consumer(bi, c_batch, col_map):
-            # inflate + prune THIS batch, then discard the raw product
+            # pull THIS batch to host, prune there, then discard the product
             if cfg.path == "dense":
-                tiles = np.asarray(c_batch)
-                pr, pc, l, tm, wbl = tiles.shape
-                for i in range(pr):
-                    for j in range(pc):
-                        for k_ in range(l):
-                            t = tiles[i, j, k_]
-                            rr, cc = np.nonzero(t)
-                            pieces.append((i * tm + rr, col_map[j, k_][cc], t[rr, cc]))
+                pieces.append(_extract_dense_batch(_to_host(c_batch), col_map))
             else:
-                c = gather_to_global(c_batch)
-                nnz = int(c.nnz)
-                rr = np.asarray(c.rows[:nnz])
-                cc_local = np.asarray(c.cols[:nnz])
-                vv = np.asarray(c.vals[:nnz])
-                # local piece cols -> global via col_map (tile order): the
-                # gathered global cols of the batch C are already tile-major;
-                # use the DistSparse direct reassembly instead:
                 pieces.append(_sparse_batch_to_global(c_batch, col_map))
             return None
 
@@ -97,6 +514,7 @@ def mcl_iterate(
             A, B, grid,
             per_process_memory=cfg.per_process_memory,
             consumer=consumer, path=cfg.path,
+            force_num_batches=cfg.force_num_batches,
         )
         rows = np.concatenate([p[0] for p in pieces])
         cols = np.concatenate([p[1] for p in pieces])
@@ -116,13 +534,8 @@ def mcl_iterate(
         colsq = np.zeros(n, np.float32)
         np.add.at(colsq, cols, vals ** 2)
         chaos = float((colmax - colsq).max())
-        history.append({
-            "iter": it, "nnz": int(len(rows)), "chaos": chaos,
-            "batches": res.plan.num_batches, "flops": res.plan.total_flops,
-        })
-        if verbose:
-            print(f"[mcl] iter={it} nnz={len(rows)} chaos={chaos:.5f} "
-                  f"b={res.plan.num_batches}")
+        _record_iter(history, it, int(len(rows)), chaos, res, t0, t0_bytes,
+                     verbose)
         cur = new
         if chaos < cfg.converge_tol:
             break
@@ -130,24 +543,21 @@ def mcl_iterate(
 
 
 def _sparse_batch_to_global(c: DistSparse, col_map: np.ndarray):
+    """Host-side reassembly of one sparse C batch into global coordinates
+    (vectorized over the tile grid)."""
     pr, pc, l = c.grid_shape
     tm, wbl = c.tile_shape
-    R = np.asarray(c.rows)
-    C = np.asarray(c.cols)
-    V = np.asarray(c.vals)
-    N = np.asarray(c.nnz)
-    rows_l, cols_l, vals_l = [], [], []
-    for i in range(pr):
-        for j in range(pc):
-            for k in range(l):
-                cnt = int(N[i, j, k])
-                rows_l.append(i * tm + R[i, j, k, :cnt])
-                cols_l.append(col_map[j, k][C[i, j, k, :cnt]])
-                vals_l.append(V[i, j, k, :cnt])
+    R = _to_host(c.rows)
+    C = _to_host(c.cols)
+    V = _to_host(c.vals)
+    N = _to_host(c.nnz)
+    cap = R.shape[-1]
+    valid = np.arange(cap)[None, None, None, :] < N[..., None]
+    i, j, kk, s = np.nonzero(valid)
     return (
-        np.concatenate(rows_l) if rows_l else np.zeros(0, np.int64),
-        np.concatenate(cols_l) if cols_l else np.zeros(0, np.int64),
-        np.concatenate(vals_l) if vals_l else np.zeros(0, np.float32),
+        i * tm + R[i, j, kk, s],
+        col_map[j, kk, C[i, j, kk, s]],
+        V[i, j, kk, s],
     )
 
 

@@ -15,8 +15,6 @@ Sharding summary (DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,36 +15,197 @@ from repro.sparse_apps.graph_algorithms import (
     triangle_count,
     triangle_count_reference,
 )
-from repro.sparse_apps.mcl import MCLConfig, clusters_from_matrix, mcl_iterate
+from repro.sparse_apps.mcl import (
+    MCLConfig,
+    clusters_from_matrix,
+    mcl_iterate,
+    mcl_iterate_host,
+)
+
+
+def _stochastic_blocks(n, blocks, intra_p, seed):
+    """Column-normalized planted-cluster input (MCL operates on a
+    column-stochastic matrix)."""
+    from repro.core.sparse import from_numpy_coo
+    from repro.sparse_apps.mcl import _col_normalize_np
+
+    a = gen.protein_similarity_like(n, blocks=blocks, intra_p=intra_p, seed=seed)
+    nnz = int(a.nnz)
+    rows = np.asarray(a.rows[:nnz])
+    cols = np.asarray(a.cols[:nnz])
+    vals = np.asarray(a.vals[:nnz]).astype(np.float64)
+    vals = _col_normalize_np(rows, cols, vals, n).astype(np.float32)
+    return from_numpy_coo(rows, cols, vals, (n, n), cap=nnz)
+
+
+def _labels(final, n):
+    nnz = int(final.nnz)
+    return clusters_from_matrix(
+        np.asarray(final.rows[:nnz]), np.asarray(final.cols[:nnz]), n
+    )
 
 
 def case_mcl_clusters_blocks():
     """MCL on a 4-block stochastic block matrix must recover ~4 clusters."""
     grid = make_grid(2, 2, 2)
-    n, blocks = 64, 4
-    a = gen.protein_similarity_like(n, blocks=blocks, intra_p=0.6, seed=3)
-    # column-normalize the input (MCL operates on a column-stochastic matrix)
-    nnz = int(a.nnz)
-    rows = np.asarray(a.rows[:nnz])
-    cols = np.asarray(a.cols[:nnz])
-    vals = np.asarray(a.vals[:nnz]).astype(np.float64)
-    from repro.sparse_apps.mcl import _col_normalize_np
-    from repro.core.sparse import from_numpy_coo
-
-    vals = _col_normalize_np(rows, cols, vals, n).astype(np.float32)
-    a = from_numpy_coo(rows, cols, vals, (n, n), cap=nnz)
+    n = 64
+    a = _stochastic_blocks(n, blocks=4, intra_p=0.6, seed=3)
     final, hist = mcl_iterate(
         a, grid, MCLConfig(max_iters=12, per_process_memory=1 << 24), verbose=True
     )
-    nnz = int(final.nnz)
-    labels = clusters_from_matrix(
-        np.asarray(final.rows[:nnz]), np.asarray(final.cols[:nnz]), n
-    )
+    labels = _labels(final, n)
     ncl = len(set(labels.tolist()))
     assert 2 <= ncl <= 10, f"expected block-ish clustering, got {ncl} clusters"
     # chaos decreased
     assert hist[-1]["chaos"] < hist[0]["chaos"]
     print(f"OK mcl_clusters_blocks (clusters={ncl}, iters={len(hist)})")
+
+
+def case_mcl_device_matches_host():
+    """Device-resident MCL == host-loop reference on a planted two-cluster
+    graph: identical per-iteration nnz trajectory, matching final cluster
+    partition, chaos converged and decreasing into convergence — including
+    under a FORCED multi-batch plan (per-batch pruning exercised) and under
+    a tight ``max_per_col`` so the distributed top-k selection actually
+    binds (values are distinct, so threshold selection == exact top-k)."""
+    grid = make_grid(2, 2, 2)
+    n = 64
+    a = _stochastic_blocks(n, blocks=2, intra_p=0.6, seed=3)
+    for nb, k in ((None, 64), (4, 64), (4, 4)):
+        cfg = MCLConfig(max_iters=12, per_process_memory=1 << 24,
+                        force_num_batches=nb, max_per_col=k)
+        fin_d, hist_d = mcl_iterate(a, grid, cfg)
+        fin_h, hist_h = mcl_iterate_host(a, grid, cfg)
+        lab_d, lab_h = _labels(fin_d, n), _labels(fin_h, n)
+        if k == 64:
+            assert len(set(lab_d.tolist())) == 2, set(lab_d.tolist())
+        else:  # aggressive top-k may over-fragment; parity is the claim
+            assert len(set(lab_d.tolist())) >= 2, set(lab_d.tolist())
+        # same partition (labels are representatives, compare co-membership)
+        for i in range(n):
+            np.testing.assert_array_equal(lab_d == lab_d[i], lab_h == lab_h[i])
+        assert [h["nnz"] for h in hist_d] == [h["nnz"] for h in hist_h], (
+            hist_d, hist_h)
+        if k < 64:  # top-k must have actually pruned below the k=64 runs
+            assert hist_d[0]["nnz"] <= n * k, hist_d[0]
+        chaos = [h["chaos"] for h in hist_d]
+        assert chaos[-1] < cfg.converge_tol, chaos
+        assert chaos[-1] < chaos[0] and chaos[-1] < chaos[-2] < chaos[-3], chaos
+        # device path moves only stat scalars per iteration; host loop moves
+        # the matrix every batch
+        assert max(h["host_bytes"] for h in hist_d) < 1024, hist_d
+        assert min(h["host_bytes"] for h in hist_h) > 10240, hist_h
+    print("OK mcl_device_matches_host")
+
+
+def case_mcl_dense_path():
+    """Dense-path device pipeline (col_prune Pallas postprocess + vectorized
+    extraction) matches the sparse device path and the host reference."""
+    grid = make_grid(2, 2, 2)
+    n = 64
+    a = _stochastic_blocks(n, blocks=2, intra_p=0.6, seed=3)
+    cfg_d = MCLConfig(max_iters=8, per_process_memory=1 << 24, path="dense",
+                      force_num_batches=2, max_per_col=8)
+    fin_dense, hist_dense = mcl_iterate(a, grid, cfg_d)
+    cfg_s = MCLConfig(max_iters=8, per_process_memory=1 << 24, path="sparse",
+                      force_num_batches=2, max_per_col=8)
+    _, hist_sparse = mcl_iterate(a, grid, cfg_s)
+    cfg_h = MCLConfig(max_iters=8, per_process_memory=1 << 24, path="dense",
+                      force_num_batches=2, max_per_col=8)
+    fin_host, hist_host = mcl_iterate_host(a, grid, cfg_h)
+    assert [h["nnz"] for h in hist_dense] == [h["nnz"] for h in hist_sparse]
+    assert [h["nnz"] for h in hist_dense] == [h["nnz"] for h in hist_host]
+    lab_d, lab_h = _labels(fin_dense, n), _labels(fin_host, n)
+    for i in range(n):
+        np.testing.assert_array_equal(lab_d == lab_d[i], lab_h == lab_h[i])
+    print("OK mcl_dense_path")
+
+
+def case_mcl_tied_topk_distributed():
+    """k-boundary ties split across GRID ROW BLOCKS: a uniform-degree graph
+    (every column = equal values, degree > k) must keep exactly k entries
+    per column on both device paths — the distributed rank fill must
+    allocate the tie quota consistently across the pr row blocks."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.distsparse import scatter_to_grid
+    from repro.core.sparse import from_dense
+    from repro.sparse_apps.mcl import _mcl_prune_dense, _mcl_prune_sparse
+
+    grid = make_grid(2, 2, 2)
+    n, deg, k = 64, 12, 5  # deg rows per column straddle both row blocks
+    x = np.zeros((n, n), np.float32)
+    for j in range(n):
+        x[(j + np.arange(0, deg * 5, 5)) % n, j] = 1.0  # spread across blocks
+    d = scatter_to_grid(from_dense(jnp.asarray(x), cap=2048), grid, "C")
+    pruned, stats = _mcl_prune_sparse(
+        d, grid=grid, inflation=2.0, thresh=1e-4, k=k, new_cap=2048,
+    )
+    assert int(np.asarray(stats["nnz"])) == n * k, int(np.asarray(stats["nnz"]))
+    # per-column counts == k exactly, assembled across all tiles
+    R = np.asarray(pruned.rows); C = np.asarray(pruned.cols)
+    N = np.asarray(pruned.nnz)
+    tm, wbl = pruned.tile_shape
+    counts = np.zeros(n, np.int64)
+    pr, pc, l = pruned.grid_shape
+    w = n // pc
+    for i in range(pr):
+        for j in range(pc):
+            for kk in range(l):
+                cnt = int(N[i, j, kk])
+                np.add.at(counts, j * w + kk * wbl + C[i, j, kk, :cnt], 1)
+    np.testing.assert_array_equal(counts, np.full(n, k))
+    # dense path: same tie semantics through the col_prune kernel
+    tiles = np.zeros((pr, pc, l, tm, wbl), np.float32)
+    for i in range(pr):
+        for j in range(pc):
+            for kk in range(l):
+                tiles[i, j, kk] = x[i * tm:(i + 1) * tm,
+                                    j * w + kk * wbl:j * w + (kk + 1) * wbl]
+    dev = jax.device_put(jnp.asarray(tiles), grid.tile_sharding())
+    out, stats_d = _mcl_prune_dense(
+        dev, grid=grid, inflation=2.0, thresh=1e-4, k=k,
+    )
+    assert int(np.asarray(stats_d["nnz"])) == n * k
+    print("OK mcl_tied_topk_distributed")
+
+
+def case_mcl_no_host_roundtrip():
+    """The sparse device-resident loop performs ZERO gather_to_global /
+    scatter_to_grid calls inside the iteration loop: exactly two scatters
+    (initial operands) and one gather (final matrix) over a whole run."""
+    from repro.core import distsparse
+
+    calls = {"scatter": 0, "gather": 0}
+    real_scatter, real_gather = distsparse.scatter_to_grid, distsparse.gather_to_global
+
+    def counting_scatter(*args, **kwargs):
+        calls["scatter"] += 1
+        return real_scatter(*args, **kwargs)
+
+    def counting_gather(*args, **kwargs):
+        calls["gather"] += 1
+        return real_gather(*args, **kwargs)
+
+    distsparse.scatter_to_grid = counting_scatter
+    distsparse.gather_to_global = counting_gather
+    try:
+        grid = make_grid(2, 2, 2)
+        n = 64
+        a = _stochastic_blocks(n, blocks=2, intra_p=0.6, seed=5)
+        _, hist = mcl_iterate(
+            a, grid,
+            MCLConfig(max_iters=6, per_process_memory=1 << 24,
+                      force_num_batches=2),
+        )
+    finally:
+        distsparse.scatter_to_grid = real_scatter
+        distsparse.gather_to_global = real_gather
+    assert len(hist) >= 3, "need a multi-iteration run to prove residency"
+    assert calls["scatter"] == 2, calls  # initial A and B only
+    assert calls["gather"] == 1, calls  # final matrix only
+    print(f"OK mcl_no_host_roundtrip (iters={len(hist)}, calls={calls})")
 
 
 def case_triangle_count_exact():

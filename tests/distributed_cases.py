@@ -19,7 +19,6 @@ from repro.core import gen
 from repro.core import semiring as sr
 from repro.core import sparse as sp
 from repro.core.batched import (
-    BatchPlan,
     batch_column_map,
     batched_summa3d,
     plan_batches,

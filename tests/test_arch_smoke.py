@@ -135,7 +135,6 @@ def test_moe_spgemm_dispatch_equals_scatter():
     """The paper-technique dispatch (SpMM) must equal the direct scatter."""
     import dataclasses as dc
 
-    from repro.models.moe import MoEConfig
 
     cfg = get_config("deepseek-moe-16b", smoke=True)
     params = tfm.init_params(cfg, jax.random.PRNGKey(5))

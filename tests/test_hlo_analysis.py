@@ -1,5 +1,4 @@
 """Validate the loop-aware HLO cost model against hand-counted programs."""
-import numpy as np
 import pytest
 
 import jax
@@ -66,7 +65,6 @@ class TestDotFlops:
 
 class TestCollectives:
     def test_psum_in_scan_counted_per_trip(self):
-        import os
         if len(jax.devices()) < 2:
             pytest.skip("needs >=2 devices")
 

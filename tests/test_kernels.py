@@ -185,3 +185,27 @@ class TestColPruneKernel:
         kept_k = (np.abs(x) >= t_k[None, :])
         kept_r = (np.abs(x) >= t_r[None, :])
         np.testing.assert_array_equal(kept_k, kept_r)
+
+    @pytest.mark.parametrize("m,n,k", [(32, 8, 4), (40, 16, 5)])
+    def test_parity_with_numpy_topk_including_ties(self, m, n, k):
+        """Threshold selection vs exact numpy top-k with REPEATED values.
+
+        The kernel keeps the largest set with |{x >= t}| <= k. When ties
+        straddle the k-th position that set is exactly the entries STRICTLY
+        greater than the k-th value (numpy's top-k keeps an arbitrary tie
+        subset); without a straddling tie it equals numpy's top-k set."""
+        from repro.kernels.col_prune import col_topk_threshold_pallas
+
+        rng = np.random.default_rng(m * n * k)
+        # quantized values -> many exact ties, including at the k boundary
+        x = (rng.integers(0, 6, (m, n)) * 0.125).astype(np.float32)
+        t = np.asarray(col_topk_threshold_pallas(jnp.asarray(x), k))
+        for j in range(n):
+            col = x[:, j]
+            kept = col >= t[j]
+            kth = np.sort(col)[::-1][k - 1]  # numpy's exact k-th largest
+            if (col >= kth).sum() > k:  # tie straddles the boundary
+                np.testing.assert_array_equal(kept, col > kth)
+            else:
+                np.testing.assert_array_equal(kept, col >= kth)
+            assert kept.sum() <= k

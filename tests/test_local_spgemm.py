@@ -1,6 +1,5 @@
 """Local SpGEMM kernels vs dense oracles — incl. semiring property tests."""
 import numpy as np
-import pytest
 from repro.testing import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -10,7 +10,15 @@ pytestmark = pytest.mark.slow
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-CASES = ["mcl_clusters_blocks", "triangle_count_exact", "overlap_pairs_exact"]
+CASES = [
+    "mcl_clusters_blocks",
+    "mcl_device_matches_host",
+    "mcl_dense_path",
+    "mcl_tied_topk_distributed",
+    "mcl_no_host_roundtrip",
+    "triangle_count_exact",
+    "overlap_pairs_exact",
+]
 
 
 @pytest.mark.parametrize("case", CASES)
