@@ -17,9 +17,12 @@ serial schedule, binned vs ESC local multiply) and writes
 ``BENCH_summa3d.json``, refreshing ``BENCH_local_kernels.json`` in the same
 run so both perf files stay in lockstep. ``--suite mcl`` runs the
 device-resident vs host-loop MCL comparison (per-iteration wall-ms and
-host-transfer bytes) and writes ``BENCH_mcl.json``. Every BENCH_*.json
-artifact validates against the shared row schema via
-``python -m benchmarks.check_bench_json`` (enforced in CI).
+host-transfer bytes) and writes ``BENCH_mcl.json``. ``--suite graph`` runs
+the §V-B masked-SpGEMM workloads (masked vs unmasked triangle counting on
+R-MAT, on-grid vs host-filtered overlap detection) and writes
+``BENCH_graph.json``. Every BENCH_*.json artifact validates against the
+shared row schema via ``python -m benchmarks.check_bench_json`` (enforced
+in CI).
 """
 import argparse
 import json
@@ -33,6 +36,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 def run_all() -> None:
     from . import (
         bench_comm_model,
+        bench_graph,
         bench_layers_batches,
         bench_local_kernels,
         bench_mcl,
@@ -50,71 +54,62 @@ def run_all() -> None:
     bench_symbolic.run()        # Fig. 8
     bench_scaling.run()         # Fig. 6/7/9 (alpha-beta projection)
     bench_mcl.run()             # Fig. 3 (HipMCL end-to-end)
+    bench_graph.run()           # §V-B masked graph workloads
     bench_roofline.run()        # EXPERIMENTS.md section Roofline feed
 
 
-def run_local(json_path: pathlib.Path) -> None:
+def _write_suite(suite: str, rows_fn, json_path: pathlib.Path) -> None:
+    """Shared single-suite runner: one payload schema for every artifact
+    (``check_bench_json`` validates exactly this envelope)."""
     import jax
 
-    from . import bench_local_kernels
-
     print("name,us_per_call,derived")
-    rows = bench_local_kernels.run_local_suite()
     payload = {
-        "suite": "local_kernels",
+        "suite": suite,
         "backend": jax.default_backend(),
         "platform": platform.platform(),
-        "rows": rows,
+        "rows": rows_fn(),
     }
     json_path.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {json_path}", file=sys.stderr)
+
+
+def run_local(json_path: pathlib.Path) -> None:
+    from . import bench_local_kernels
+
+    _write_suite("local_kernels", bench_local_kernels.run_local_suite, json_path)
 
 
 def run_summa3d(json_path: pathlib.Path) -> None:
-    import jax
-
     from . import bench_summa3d
 
-    print("name,us_per_call,derived")
-    rows = bench_summa3d.run_summa3d_suite()
-    payload = {
-        "suite": "summa3d_driver",
-        "backend": jax.default_backend(),
-        "platform": platform.platform(),
-        "rows": rows,
-    }
-    json_path.write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"# wrote {json_path}", file=sys.stderr)
+    _write_suite("summa3d_driver", bench_summa3d.run_summa3d_suite, json_path)
     # keep the local-kernel numbers in lockstep with the driver numbers
     run_local(REPO_ROOT / "BENCH_local_kernels.json")
 
 
 def run_mcl(json_path: pathlib.Path) -> None:
-    import jax
-
     from . import bench_mcl
 
-    print("name,us_per_call,derived")
-    rows = bench_mcl.run_mcl_suite()
-    payload = {
-        "suite": "mcl_pipeline",
-        "backend": jax.default_backend(),
-        "platform": platform.platform(),
-        "rows": rows,
-    }
-    json_path.write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"# wrote {json_path}", file=sys.stderr)
+    _write_suite("mcl_pipeline", bench_mcl.run_mcl_suite, json_path)
+
+
+def run_graph(json_path: pathlib.Path) -> None:
+    from . import bench_graph
+
+    _write_suite("graph_masked", bench_graph.run_graph_suite, json_path)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
-        "--suite", choices=("all", "local", "summa3d", "mcl"), default="all"
+        "--suite", choices=("all", "local", "summa3d", "mcl", "graph"),
+        default="all",
     )
     ap.add_argument(
         "--json-out",
         default=None,
-        help="output path for --suite local / --suite summa3d",
+        help="output path for the single-suite modes",
     )
     args = ap.parse_args()
     if args.suite == "local":
@@ -127,6 +122,10 @@ def main() -> None:
         ))
     elif args.suite == "mcl":
         run_mcl(pathlib.Path(args.json_out or REPO_ROOT / "BENCH_mcl.json"))
+    elif args.suite == "graph":
+        run_graph(pathlib.Path(
+            args.json_out or REPO_ROOT / "BENCH_graph.json"
+        ))
     else:
         run_all()
 

@@ -48,7 +48,7 @@ from __future__ import annotations
 import dataclasses
 from collections import deque
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +75,7 @@ from .symbolic import (
     fold_block_cyclic,
     plan_k_bins,
     rup8 as _rup8,
+    rup_pow2 as _rup_pow2,
 )
 
 # cached compiles: one per (grid, caps, semiring, tile-shape) combination —
@@ -88,7 +89,7 @@ _fused_jit = jax.jit(
     summa3d_fused_step,
     static_argnames=(
         "grid", "num_batches", "sel_cap", "caps", "semiring", "sorted_merge",
-        "path", "kbin",
+        "path", "kbin", "mask_cap", "mask_complement",
     ),
 )
 
@@ -105,12 +106,17 @@ class SymbolicCounts:
     Only count *vectors* ever travel (§IV-A, Fig. 8) — the same payload now
     also carries what the numeric pass needs to size selection buffers and
     the k-bin plan, so no extra communication round is spent on either.
+    ``mask_colcounts`` (masked multiplies only) holds the mask's exact
+    per-(tile, local column) entry counts — the §V-B observation that a
+    strict mask bounds C's structure, so the batch plan can budget survivors
+    instead of the full product.
     """
 
     percol: np.ndarray  # (pr, pc, l, tn_b) flops per local output column
     b_colcounts: np.ndarray  # (pr, pc, l, tn_b) B entries per local column
     a_kcounts: np.ndarray  # (pr, l, k_tot) per-k counts of gathered A
     b_kcounts: np.ndarray  # (pc, l, k_tot) per-k counts of gathered B
+    mask_colcounts: Optional[np.ndarray] = None  # (pr, pc, l, wl) mask nnz
 
 
 @partial(jax.jit, static_argnames=("grid",))
@@ -172,9 +178,39 @@ def _symbolic3d_jit(a: DistSparse, b: DistSparse, grid: Grid):
     return fn(a, b)
 
 
-def symbolic3d_counts(a: DistSparse, b: DistSparse, grid: Grid) -> SymbolicCounts:
-    """Run the distributed symbolic step; see ``SymbolicCounts``."""
+def _mask_tile_colcounts(mask: DistSparse) -> np.ndarray:
+    """Exact per-(tile, local column) mask entry counts — (pr, pc, l, wl).
+
+    Host-side count math on the planner path (the same altitude as the rest
+    of ``plan_batches``): like the symbolic pass itself, only counts are
+    derived — mask values never matter, and the result is exact, so the
+    mask-selection capacity it sizes cannot overflow.
+    """
+    C = np.asarray(mask.cols)
+    N = np.asarray(mask.nnz)
+    pr, pc, l, cap = C.shape
+    tn = mask.tile_shape[1]
+    valid = np.arange(cap)[None, None, None, :] < N[..., None]
+    tile = np.arange(pr * pc * l).reshape(pr, pc, l, 1)
+    flat = tile * (tn + 1) + np.where(valid, C, tn)
+    cnt = np.bincount(flat.ravel(), minlength=pr * pc * l * (tn + 1))
+    return cnt.reshape(pr, pc, l, tn + 1)[..., :tn].astype(np.int64)
+
+
+def symbolic3d_counts(
+    a: DistSparse, b: DistSparse, grid: Grid, mask: Optional[DistSparse] = None
+) -> SymbolicCounts:
+    """Run the distributed symbolic step; see ``SymbolicCounts``.
+
+    ``mask`` (C-layout, same global shape as the product) additionally emits
+    the masked output counts the §V-B applications plan with.
+    """
     percol, bcc, cc_full, rc_full = _symbolic3d_jit(a, b, grid)
+    mask_cc = None
+    if mask is not None:
+        assert mask.kind in ("A", "C"), mask.kind
+        assert mask.shape == (a.shape[0], b.shape[1]), (mask.shape, a.shape, b.shape)
+        mask_cc = _mask_tile_colcounts(mask)
     # cc_full is a function of (row block, layer) only; rc_full of
     # (col block, layer) only — slice the redundant grid axes away.
     return SymbolicCounts(
@@ -182,6 +218,7 @@ def symbolic3d_counts(a: DistSparse, b: DistSparse, grid: Grid) -> SymbolicCount
         b_colcounts=np.asarray(bcc),
         a_kcounts=np.asarray(cc_full)[:, 0],  # (pr, l, k_tot)
         b_kcounts=np.asarray(rc_full)[0],  # (pc, l, k_tot)
+        mask_colcounts=mask_cc,
     )
 
 
@@ -194,7 +231,8 @@ def symbolic3d(a: DistSparse, b: DistSparse, grid: Grid) -> np.ndarray:
 
     which is exactly the number of partial products process (i,j,k) forms for
     output column c in the numeric step (A gathered over the grid row, B over
-    the grid column group). ``symbolic3d_counts`` exposes the fuller payload.
+    the grid column group). ``symbolic3d_counts`` exposes the fuller payload
+    (including the masked output counts when its ``mask`` is given).
     """
     return symbolic3d_counts(a, b, grid).percol
 
@@ -207,10 +245,11 @@ class BatchPlan:
     lower_bound: int  # Eq. (2)
     caps: BatchCaps
     total_flops: int  # Σ multiply ops (global)
-    max_unmerged_nnz: int  # max over processes, b=1
+    max_unmerged_nnz: int  # max over processes, b=1 (mask-filtered if masked)
     per_batch_flops: np.ndarray  # (num_batches,) global flops per batch
     sel_cap: int = 0  # exact per-batch selection capacity (B entries)
     kbin: Optional[KBinPlan] = None  # k-bin plan for the paired local multiply
+    mask_sel_cap: int = 0  # exact per-batch mask-slice capacity (masked only)
 
     @property
     def binned_profitable(self) -> bool:
@@ -236,6 +275,13 @@ def plan_batches(
     slack: float = 1.3,
     force_num_batches: Optional[int] = None,
     reserved_bytes: int = 0,
+    mask: Optional[DistSparse] = None,
+    mask_complement: bool = False,
+    caps_pow2: bool = False,
+    caps_floor: Optional[BatchCaps] = None,
+    sel_cap_floor: int = 0,
+    num_batches_floor: int = 0,
+    kbin_candidates: Optional[Tuple[int, ...]] = None,
 ) -> BatchPlan:
     """Run the symbolic step and derive b + static capacities (host math).
 
@@ -244,6 +290,36 @@ def plan_batches(
     to the CONSUMED outputs (e.g. the pruned batches a memory-constrained MCL
     iteration keeps on-device for the next iterate, §V-C) — so the budget
     honors what actually lives alongside the unmerged batch results.
+
+    ``mask`` switches on masked planning (§V-B): with a strict mask
+    (``mask_complement=False``) the surviving output structure is bounded by
+    the mask's exact per-column counts, so the unmerged budget, the batch
+    count, and the D/piece/C capacities all shrink to survivors —
+    per column c of process (i,j,k):
+
+      unmerged ≤ min(flops[c], mask[c] · nnz(B_gathered(:, c)))  (pre-merge)
+      merged D ≤ min(flops[c], mask[c])                          (post-merge)
+      merged C ≤ min(Σ_k flops[k][c], mask[c])
+
+    (a complement mask excludes structure, so it cannot tighten counts —
+    the plan stays at the unmasked bounds and only the numeric filter runs).
+    ``mask_sel_cap`` is sized from the exact mask counts, so the per-batch
+    mask-slice selection can never overflow.
+
+    Memory-model semantics: the Alg. 3 budget charges r·nnz of *stored*
+    unmerged results — in the paper's hash SpGEMM partial products are
+    consumed on the fly, and the masked counts above model exactly the
+    stored survivors. Our ESC rendering does materialize an UNMASKED
+    ``flops_cap`` expansion scratch per batch (the filter runs between
+    expansion and compress), so on memory-bound hardware that transient is
+    the masked path's true high-water mark; gating the expansion itself is
+    the ROADMAP follow-up that removes it.
+
+    ``caps_pow2`` rounds every derived capacity up to the next power of two
+    and ``caps_floor``/``sel_cap_floor`` take an elementwise max with a
+    previous plan's capacities — together they keep the fused step's static
+    signature stable across the iterations of an iterated multiply (MCL),
+    so per-iteration cap drift hits the jit cache instead of recompiling.
     """
     if reserved_bytes >= per_process_memory:
         raise MemoryError(
@@ -251,11 +327,23 @@ def plan_batches(
             f"memory ({per_process_memory})"
         )
     per_process_memory = per_process_memory - reserved_bytes
-    counts = symbolic3d_counts(a, b, grid)
+    counts = symbolic3d_counts(a, b, grid, mask=mask)
     percol = counts.percol  # (pr, pc, l, tn_b)
     pr, pc, l, tn_b = percol.shape
+    masked = mask is not None and not mask_complement
+    if masked:
+        # mcount[i, j, c]: mask entries of (row block i, col block j) at
+        # block-local column c — the (l, wl) mask tiles laid out layer-major
+        # cover exactly the w = tn_b local columns of the block.
+        mcount = counts.mask_colcounts.reshape(pr, pc, tn_b)
+        bcolg = counts.b_colcounts.sum(axis=0, keepdims=True)  # (1,pc,l,tn_b)
+        unmerged_percol = np.minimum(percol, mcount[:, :, None, :] * bcolg)
+        merged_d_percol = np.minimum(percol, mcount[:, :, None, :])
+    else:
+        unmerged_percol = percol
+        merged_d_percol = percol
     per_process_flops = percol.sum(axis=-1)  # (pr, pc, l)
-    max_unmerged = int(per_process_flops.max())
+    max_unmerged = int(unmerged_percol.sum(axis=-1).max())
     total_flops = int(per_process_flops.sum())
     max_nnz_a = int(np.asarray(a.nnz).max())
     max_nnz_b = int(np.asarray(b.nnz).max())
@@ -263,8 +351,15 @@ def plan_batches(
     if force_num_batches is not None:
         nb = force_num_batches
     else:
-        nb = batch_count(
-            max_unmerged, max_nnz_a, max_nnz_b, per_process_memory, r=r_bytes
+        # num_batches is part of the fused step's static signature; the
+        # floor (a previous iteration's count — more batches is always
+        # valid) keeps iterated multiplies on one executable as nnz drifts.
+        nb = max(
+            batch_count(
+                max_unmerged, max_nnz_a, max_nnz_b, per_process_memory,
+                r=r_bytes,
+            ),
+            num_batches_floor,
         )
     nb = batching_plan_columns(tn_b, nb, l)
 
@@ -272,14 +367,23 @@ def plan_batches(
     flops_pbp = fold_block_cyclic(percol, nb, l)  # (pr,pc,l,nb,l)
     per_batch_proc = flops_pbp.sum(axis=-1)  # (pr,pc,l,nb)
     max_batch_flops = int(per_batch_proc.max())
-    max_piece_flops = int(flops_pbp.max())
-    # merged C piece bound: sum over source layers of that piece's flops
-    merged_piece = flops_pbp.sum(axis=2).max()  # max over (pr,pc,batch,piece)
+    # D-tile bounds come from the mask-filtered counts (the filter runs
+    # before the compress, so survivors alone occupy the static buffers)
+    d_pbp = fold_block_cyclic(merged_d_percol, nb, l)
+    max_batch_d = int(d_pbp.sum(axis=-1).max())
+    max_piece_flops = int(d_pbp.max())
+    # merged C piece bound: sum over source layers, mask-capped per column
+    merged_col = percol.sum(axis=2)  # (pr, pc, tn_b)
+    if masked:
+        merged_col = np.minimum(merged_col, mcount)
+    merged_piece = fold_block_cyclic(merged_col, nb, l).max()
 
     tm_a = a.tile_shape[0]
     wb = tn_b // nb
     flops_cap = _rup8(max(int(max_batch_flops * slack), 64))
-    d_cap = _rup8(min(flops_cap, tm_a * wb))
+    d_cap = _rup8(
+        min(max(int(max_batch_d * slack), 64), flops_cap, tm_a * wb)
+    )
     piece_cap = _rup8(min(max(int(max_piece_flops * slack), 64), tm_a * (wb // l)))
     c_cap = _rup8(min(max(int(merged_piece * slack), 64), tm_a * (wb // l)))
     caps = BatchCaps(flops_cap=flops_cap, d_cap=d_cap, piece_cap=piece_cap, c_cap=c_cap)
@@ -291,14 +395,45 @@ def plan_batches(
     sel_per_batch = fold_block_cyclic(counts.b_colcounts, nb, l).sum(axis=-1)
     sel_cap = min(_rup8(max(int(sel_per_batch.max()), 8)), b.cap)
 
+    # exact per-batch mask-slice capacity: batch bi selects the contiguous
+    # local columns [bi·wbl, (bi+1)·wbl) of every mask tile.
+    mask_sel_cap = 0
+    if mask is not None:
+        wbl = tn_b // (nb * l)
+        per_batch_mask = counts.mask_colcounts.reshape(
+            pr, pc, l, nb, wbl
+        ).sum(axis=-1)
+        mask_sel_cap = min(
+            _rup8(max(int(per_batch_mask.max()), 8)), mask.cap
+        )
+
+    if caps_pow2:
+        caps = BatchCaps(*(_rup_pow2(x) for x in dataclasses.astuple(caps)))
+        sel_cap = min(_rup_pow2(sel_cap), b.cap)
+        if mask is not None:
+            mask_sel_cap = min(_rup_pow2(mask_sel_cap), mask.cap)
+    if caps_floor is not None:
+        caps = BatchCaps(*(
+            max(x, y) for x, y in zip(
+                dataclasses.astuple(caps), dataclasses.astuple(caps_floor)
+            )
+        ))
+    sel_cap = max(sel_cap, sel_cap_floor)
+
     # k-bin plan for the gathered pairing: per-k count vectors bounded
     # element-wise over (block, layer) so the static caps hold on every
     # process; gathered capacities are pc·capA / pr·sel_cap slots.
+    # ``kbin_candidates`` pins the bin-count choice (iterated multiplies pin
+    # it to the previous iteration's bin count for jit-cache stability).
+    kbin_kwargs = (
+        {"candidates": tuple(kbin_candidates)} if kbin_candidates else {}
+    )
     kbin = plan_k_bins(
         counts.a_kcounts.max(axis=(0, 1)),
         counts.b_kcounts.max(axis=(0, 1)),
         pc * a.cap,
         pr * sel_cap,
+        **kbin_kwargs,
     )
 
     # Eq. (2) lower bound (global memory form) for reporting/validation
@@ -322,7 +457,27 @@ def plan_batches(
         per_batch_flops=per_batch_flops,
         sel_cap=sel_cap,
         kbin=kbin,
+        mask_sel_cap=mask_sel_cap,
     )
+
+
+def probe_memory_budget(
+    a: DistSparse, b: DistSparse, grid: Grid,
+    r_bytes: int = 12, fraction: int = 3, floor: int = 256,
+) -> int:
+    """A per-process budget that forces the (unmasked) plan to batch:
+    inputs plus 1/``fraction`` of the probed unmerged output.
+
+    Shared by the graph bench and the slow-lane R-MAT cases so both assert
+    the §V-B masked-vs-unmasked claim against the SAME budget math (the
+    symbolic probe is jit-cached — replanning is cheap).
+    """
+    probe = plan_batches(a, b, grid, per_process_memory=1 << 30,
+                         r_bytes=r_bytes)
+    inputs = r_bytes * (
+        int(np.asarray(a.nnz).max()) + int(np.asarray(b.nnz).max())
+    )
+    return inputs + max(r_bytes * probe.max_unmerged_nnz // fraction, floor)
 
 
 def batch_column_map(n: int, grid: Grid, num_batches: int, batch: int) -> np.ndarray:
@@ -361,6 +516,7 @@ class BatchedResult:
     num_retries: int
     consumed: list  # consumer outputs per batch
     binned: bool = False  # did the sparse local multiply run k-binned?
+    binned_caps: Optional[BinnedCaps] = None  # the static BinnedCaps used
 
 
 def batched_summa3d(
@@ -381,6 +537,14 @@ def batched_summa3d(
     binned: object = "auto",
     postprocess: Optional[Callable[[int, object], object]] = None,
     reserved_bytes: int = 0,
+    mask: Optional[DistSparse] = None,
+    mask_complement: bool = False,
+    caps_pow2: bool = False,
+    caps_floor: Optional[BatchCaps] = None,
+    sel_cap_floor: int = 0,
+    num_batches_floor: int = 0,
+    kbin_candidates: Optional[Tuple[int, ...]] = None,
+    kbin_caps_floor: Optional[BinnedCaps] = None,
 ) -> BatchedResult:
     """Multiply A·B in batches; the consumer sees each batch then it's freed.
 
@@ -388,6 +552,15 @@ def batched_summa3d(
     DistSparse (path="sparse") or stacked dense tiles (path="dense").
     ``sorted_merge`` selects the segmented (merge-not-sort) Merge-Fiber in
     the per-batch sparse step.
+
+    ``mask`` runs the masked/filtered SpGEMM (§V-B): a C-layout
+    ``DistSparse`` whose structure gates the output — consumers receive
+    C ⊙ M (or C ⊙ ¬M under ``mask_complement=True``). The mask stays
+    device-resident: the plan budgets only surviving entries (strict mode),
+    and each batch's mask slice is selected + fiber-gathered inside the
+    fused step. ``caps_pow2``/``caps_floor``/``sel_cap_floor`` quantize and
+    floor the planned capacities (see ``plan_batches``) so iterated callers
+    reuse one fused-step executable across iterations.
 
     ``postprocess(batch_idx, c_batch) -> c_batch'`` is the DEVICE-side
     per-batch hook (HipMCL integration, §V-C): a jitted transform applied to
@@ -417,6 +590,9 @@ def batched_summa3d(
     plan = plan_batches(
         a, b, grid, per_process_memory, r_bytes=r_bytes, slack=slack,
         force_num_batches=force_num_batches, reserved_bytes=reserved_bytes,
+        mask=mask, mask_complement=mask_complement,
+        caps_pow2=caps_pow2, caps_floor=caps_floor, sel_cap_floor=sel_cap_floor,
+        num_batches_floor=num_batches_floor, kbin_candidates=kbin_candidates,
     )
     nb = plan.num_batches
     n_cols = b.shape[1]
@@ -437,39 +613,79 @@ def batched_summa3d(
         BinnedCaps(plan.kbin.num_bins, plan.kbin.bin_cap_a, plan.kbin.bin_cap_b)
         if use_binned else None
     )
+    if kb is not None and caps_pow2:
+        # same quantization as BatchCaps, for the same jit-cache reason
+        kb = BinnedCaps(
+            kb.num_bins, _rup_pow2(kb.bin_cap_a), _rup_pow2(kb.bin_cap_b)
+        )
+    if kb is not None and kbin_caps_floor is not None:
+        assert kb.num_bins == kbin_caps_floor.num_bins, (
+            "kbin_caps_floor requires a pinned bin count (kbin_candidates)"
+        )
+        kb = BinnedCaps(
+            kb.num_bins,
+            max(kb.bin_cap_a, kbin_caps_floor.bin_cap_a),
+            max(kb.bin_cap_b, kbin_caps_floor.bin_cap_b),
+        )
     bin_of_k = jnp.asarray(plan.kbin.bin_of_k) if use_binned else None
 
-    caps, sel_cap = plan.caps, plan.sel_cap
+    caps, sel_cap, mask_cap = plan.caps, plan.sel_cap, plan.mask_sel_cap
     retries = 0
 
-    def dispatch(bi: int, caps_: BatchCaps, sel_cap_: int, kb_):
+    def dispatch(bi: int, caps_: BatchCaps, sel_cap_: int, kb_, mask_cap_: int):
         """Async-dispatch one fused batch step; nothing blocks here."""
         return _fused_jit(
-            a, b, jnp.int32(bi), bin_of_k, grid=grid, num_batches=nb,
+            a, b, jnp.int32(bi), bin_of_k, mask, grid=grid, num_batches=nb,
             sel_cap=sel_cap_, caps=caps_, semiring=semiring,
             sorted_merge=sorted_merge, path=path, kbin=kb_,
+            mask_cap=mask_cap_, mask_complement=mask_complement,
         )
 
-    def grow(o: np.ndarray, caps_: BatchCaps, sel_cap_: int, kb_):
+    # capacities actually used, including retry growth — reported on the
+    # returned plan so iterated callers (MCL) floor their NEXT plan on
+    # reality instead of replaying a known-too-small estimate every
+    # iteration. Dispatch defaults stay at the planned values within this
+    # run: the pipelined and serial schedules must remain batch-identical
+    # (each batch's retry ladder grows from the same base).
+    used = {"caps": caps, "sel": sel_cap, "kb": kb, "mask": mask_cap}
+
+    def grow(o: np.ndarray, caps_: BatchCaps, sel_cap_: int, kb_, mask_cap_: int):
         """Next capacity plan after an overflow: selection first (a truncated
-        selection makes the multiply flags unreliable), multiply second."""
+        selection makes the multiply flags unreliable), multiply second.
+        The mask-slice capacity is exact, but it is doubled alongside the
+        multiply caps anyway so the retry ladder stays monotone."""
         if o[0] > 0:
             sel_cap_ = min(_rup8(max(sel_cap_ * 2, 8)), b.cap)
         elif o[1] > 0:
             caps_ = caps_.doubled()
             kb_ = kb_.doubled() if kb_ is not None else None
-        return caps_, sel_cap_, kb_
+            if mask is not None:
+                mask_cap_ = min(mask_cap_ * 2, mask.cap)
+        used["sel"] = max(used["sel"], sel_cap_)
+        used["mask"] = max(used["mask"], mask_cap_)
+        used["caps"] = BatchCaps(*(
+            max(x, y) for x, y in zip(
+                dataclasses.astuple(used["caps"]), dataclasses.astuple(caps_)
+            )
+        ))
+        if kb_ is not None:
+            used["kb"] = BinnedCaps(
+                kb_.num_bins,
+                max(used["kb"].bin_cap_a, kb_.bin_cap_a),
+                max(used["kb"].bin_cap_b, kb_.bin_cap_b),
+            )
+        return caps_, sel_cap_, kb_, mask_cap_
 
-    def run_batch_sync(bi: int, caps_: BatchCaps, sel_cap_: int, kb_):
+    def run_batch_sync(bi: int, caps_: BatchCaps, sel_cap_: int, kb_, mask_cap_: int):
         """The kept, tested synchronous retry loop (§IV-A robustness)."""
         nonlocal retries
         for _ in range(max_retries + 1):
-            c_batch, ovf = dispatch(bi, caps_, sel_cap_, kb_)
+            c_batch, ovf = dispatch(bi, caps_, sel_cap_, kb_, mask_cap_)
             o = np.asarray(ovf)
             if not o.any():
                 return c_batch
             retries += 1
-            caps_, sel_cap_, kb_ = grow(o, caps_, sel_cap_, kb_)
+            caps_, sel_cap_, kb_, mask_cap_ = grow(o, caps_, sel_cap_, kb_, mask_cap_)
         raise RuntimeError(
             f"batch {bi}: capacity overflow persisted after {max_retries} retries"
         )
@@ -488,24 +704,32 @@ def batched_summa3d(
             retries += 1
             # the speculatively postprocessed batch was built from a garbage
             # product — recompute synchronously and re-run the hook on it
-            c_post = post(bi, run_batch_sync(bi, *grow(o, caps, sel_cap, kb)))
+            c_post = post(
+                bi, run_batch_sync(bi, *grow(o, caps, sel_cap, kb, mask_cap))
+            )
         col_map = batch_column_map(n_cols, grid, nb, bi)
         consumed.append(consumer(bi, c_post, col_map))
 
     if not pipelined:
         for bi in range(nb):
-            c_batch = post(bi, run_batch_sync(bi, caps, sel_cap, kb))
+            c_batch = post(bi, run_batch_sync(bi, caps, sel_cap, kb, mask_cap))
             col_map = batch_column_map(n_cols, grid, nb, bi)
             consumed.append(consumer(bi, c_batch, col_map))
     else:
         inflight = deque()
         for bi in range(nb):
-            c_batch, ovf = dispatch(bi, caps, sel_cap, kb)
+            c_batch, ovf = dispatch(bi, caps, sel_cap, kb, mask_cap)
             inflight.append((bi, post(bi, c_batch), ovf))
             if len(inflight) > lookahead:
                 finish(*inflight.popleft())
         while inflight:
             finish(*inflight.popleft())
+    # report the capacities actually used (incl. any retry growth) so
+    # iterated callers floor their next plan on reality, not the estimate
+    plan = dataclasses.replace(
+        plan, caps=used["caps"], sel_cap=used["sel"], mask_sel_cap=used["mask"]
+    )
     return BatchedResult(
-        plan=plan, num_retries=retries, consumed=consumed, binned=use_binned
+        plan=plan, num_retries=retries, consumed=consumed, binned=use_binned,
+        binned_caps=used["kb"],
     )

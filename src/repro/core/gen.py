@@ -92,6 +92,21 @@ def protein_similarity_like(
     return from_numpy_coo(rows, cols, vals, (n, n), cap=cap)
 
 
+def symmetrized(a: SparseCOO) -> SparseCOO:
+    """Undirected unit-weight graph from any square pattern: symmetrize and
+    drop self loops (the triangle-counting input shape, §V-B)."""
+    n = a.shape[0]
+    nnz = int(a.nnz)
+    rows = np.asarray(a.rows[:nnz])
+    cols = np.asarray(a.cols[:nnz])
+    r2 = np.concatenate([rows, cols])
+    c2 = np.concatenate([cols, rows])
+    keep = r2 != c2
+    return from_numpy_coo(
+        r2[keep], c2[keep], np.ones(int(keep.sum()), np.float32), (n, n)
+    )
+
+
 def kmer_like(
     nseqs: int, nkmers: int, kmers_per_seq: int, seed: int = 0, dtype=np.float32,
     cap: int = None,

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from . import semiring as sr
 from . import sortkeys
 from . import sparse as sparse_mod
-from .sparse import SparseCOO, empty
+from .sparse import SparseCOO
 
 Array = jnp.ndarray
 
@@ -169,12 +169,23 @@ def spgemm_esc(
     semiring: sr.Semiring = sr.PLUS_TIMES,
     a_is_colsorted: bool = False,
     engine: str = "auto",
+    mask_keys: Array = None,
+    mask_complement: bool = False,
 ) -> Tuple[SparseCOO, Array]:
     """Sparse × sparse → sparse via expand–sort–compress.
 
     Inputs need not be sorted (paper §IV-D: sort-free inputs); only the final
     output is row-major sorted. Returns (C, overflow-count) where overflow > 0
     means out_cap or flops_cap was too small (caller increases b / capacity).
+
+    ``mask_keys`` (ascending packed row-major (row, col) keys of the output
+    space, from ``sortkeys.sorted_mask_keys``) switches on the masked
+    (filtered-semiring) formulation: expanded partial products are
+    intersected against the mask BEFORE the compress, so only surviving
+    coordinates consume ``out_cap`` — C = (A·B) ⊙ M for
+    ``mask_complement=False``, C = (A·B) ⊙ ¬M for ``mask_complement=True``.
+    Coordinate filtering commutes with the coordinate-wise merge, so this is
+    exact for every semiring.
     """
     m, k = a.shape
     k2, n = b.shape
@@ -186,6 +197,10 @@ def spgemm_esc(
     # b entry is (row=k, col=j). After transpose: row=j, col=k, shape (n, k).
     rows, cols, vals, valid, total = _expand(a_csc, bt, flops_cap, semiring)
     flop_overflow = jnp.maximum(total - flops_cap, 0)
+    if mask_keys is not None:
+        key = sortkeys.pack_rowmajor(rows, cols, n)
+        hit = sortkeys.keys_in_sorted(key, mask_keys)
+        valid = valid & (~hit if mask_complement else hit)
 
     expanded = SparseCOO(rows, cols, vals, jnp.int32(flops_cap), (m, n))
     # compress: packed-key engine (bucket scan / single-key sort — the one
@@ -221,6 +236,8 @@ def spgemm_kbinned(
     bin_cap_b: int,
     bin_of_k: Array = None,
     semiring: sr.Semiring = sr.PLUS_TIMES,
+    mask: SparseCOO = None,
+    mask_complement: bool = False,
 ) -> Tuple[SparseCOO, Array]:
     """Sparse × sparse → sparse via the k-binned paired kernel.
 
@@ -236,6 +253,11 @@ def spgemm_kbinned(
     Requires the plus_times semiring (the pairing kernel accumulates with
     + and ×). Returns (C, overflow) where overflow counts both bin-capacity
     and ``out_cap`` violations (§IV-A retry discipline).
+
+    ``mask`` (a SparseCOO over the output space) applies the masked-SpGEMM
+    filter on the dense accumulator before sparsification — the dense-path
+    twin of ``spgemm_esc``'s packed-key intersect, with the same
+    strict/complement semantics — so ``out_cap`` only pays for survivors.
     """
     from ..kernels.spgemm_binned import spgemm_binned_dense
 
@@ -257,10 +279,29 @@ def spgemm_kbinned(
         m, n, k, num_bins, bin_cap_a, bin_cap_b, bin_map=bin_of_k,
         use_pallas=on_tpu, interpret=not on_tpu,
     )
+    if mask is not None:
+        dense = jnp.where(mask_indicator(mask, mask_complement), dense, 0.0)
     # the pairing kernel accumulates f32; restore the input dtype so the
     # binned and ESC paths stay interchangeable behind the plan switch
     c, ovf_out = sparse_mod.from_dense_overflow(dense.astype(a.dtype), out_cap)
     return c, ovf_bin + ovf_out
+
+
+def mask_indicator(mask: SparseCOO, complement: bool = False) -> Array:
+    """bool (m, n): mask membership as a dense indicator (sentinel-safe).
+
+    The dense-accumulator counterpart of the packed-key mask intersect:
+    scatter a presence bit per mask entry, flip for the complement mode.
+    Used by the k-binned local multiply and the dense SUMMA path, where the
+    product already lives in a dense block.
+    """
+    m, n = mask.shape
+    ind = (
+        jnp.zeros((m + 1, n + 1), jnp.int32)
+        .at[mask.rows, mask.cols]
+        .max(mask.valid_mask().astype(jnp.int32))
+    )[:m, :n] > 0
+    return ~ind if complement else ind
 
 
 def merge_sparse(

@@ -260,6 +260,39 @@ def count_unique(
 
 
 # ---------------------------------------------------------------------------
+# membership against a sorted key set (masked SpGEMM, paper §V-B semantics)
+# ---------------------------------------------------------------------------
+def keys_in_sorted(keys: Array, sorted_keys: Array) -> Array:
+    """bool[cap]: is ``keys[e]`` present in the ascending ``sorted_keys``?
+
+    One ``searchsorted`` + gather — the packed-key rendering of a masked
+    (filtered-semiring) SpGEMM: C's candidate coordinates are intersected
+    against the mask's key set BEFORE the compress, so non-mask partial
+    products never occupy output capacity. Sentinel padding in
+    ``sorted_keys`` (max key) can only match a sentinel query, which callers
+    already exclude via their ``valid`` mask.
+    """
+    cap = sorted_keys.shape[0]
+    pos = jnp.searchsorted(sorted_keys, keys, side="left").astype(jnp.int32)
+    return sorted_keys[jnp.clip(pos, 0, cap - 1)] == keys
+
+
+def sorted_mask_keys(rows: Array, cols: Array, valid: Array, shape) -> Array:
+    """Pack a mask's (row, col) coordinates and sort them ascending — the
+    one-time (per batch) preparation for ``keys_in_sorted`` lookups. Padding
+    maps to the max (sentinel) key and sorts to the tail."""
+    m, n = shape
+    assert fits_i32(m, n), (
+        f"masked SpGEMM needs an i32-packable key space, got {m}x{n} "
+        f"(x64 packed keys are a roadmap follow-up)"
+    )
+    sent = jnp.int32(key_space(m, n) - 1)
+    key = jnp.where(valid, pack_rowmajor(rows, cols, n), sent)
+    (skey,) = jax.lax.sort((key,), num_keys=1)
+    return skey
+
+
+# ---------------------------------------------------------------------------
 # segmented merge of already-sorted runs (Merge-Fiber fast path)
 # ---------------------------------------------------------------------------
 def merge_two_sorted(

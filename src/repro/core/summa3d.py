@@ -55,13 +55,26 @@ import jax.numpy as jnp
 from jax import lax
 
 from . import semiring as sr
+from . import sortkeys
 from ..compat import axis_size, shard_map
 from .distsparse import DistSparse, dist_spec
 from .grid import COL_AX, LAYER_AX, ROW_AX, Grid
-from .local_spgemm import spgemm_esc, spgemm_kbinned, spmm, merge_sparse
+from .local_spgemm import (
+    mask_indicator,
+    merge_sparse,
+    spgemm_esc,
+    spgemm_kbinned,
+    spmm,
+)
 from .sparse import SparseCOO, concat as sparse_concat
 
 Array = jnp.ndarray
+
+#: Trace-time counters (a trace == a compile for the module-level jits).
+#: ``summa3d_fused_step`` bumps its entry every time jit re-traces it, so
+#: tests can assert the batched driver hits the jit cache across MCL
+#: iterations instead of recompiling per capacity plan.
+TRACE_COUNTS = {"fused_step": 0}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -282,10 +295,15 @@ def _pmax_grid(x: Array) -> Array:
     return lax.pmax(lax.pmax(lax.pmax(x, ROW_AX), COL_AX), LAYER_AX)
 
 
+def _psum_grid(x: Array) -> Array:
+    return lax.psum(lax.psum(lax.psum(x, ROW_AX), COL_AX), LAYER_AX)
+
+
 def _sparse_tile_body(
     a_loc: SparseCOO, b_loc: SparseCOO, l: int, caps: BatchCaps,
     semiring: sr.Semiring, sorted_merge: bool,
     kbin: "BinnedCaps" = None, bin_of_k: Array = None,
+    mask: SparseCOO = None, mask_complement: bool = False,
 ) -> Tuple[SparseCOO, Array]:
     """Per-device sparse pipeline (inside shard_map): gather → local multiply
     → partitioned ColSplit → AllToAll-Fiber → Merge-Fiber.
@@ -295,6 +313,14 @@ def _sparse_tile_body(
     O(Σ_g capA_g×capB_g) instead of O(capA×capB) — the plan-driven switch the
     symbolic step emits. Both produce a row-major-sorted D tile, so the
     downstream split/merge invariants are identical.
+
+    ``mask`` (a SparseCOO over the D tile's (tm, tn_b) output space) runs the
+    masked/filtered formulation: ESC intersects the expanded products'
+    packed keys against the mask's sorted keys before the compress, the
+    binned path filters its dense accumulator — either way only surviving
+    coordinates consume ``caps.d_cap`` and everything downstream
+    (ColSplit pieces, the fiber exchange, Merge-Fiber) carries survivors
+    only, which is where the masked memory/traffic win lives.
     """
     tm_a, _ = a_loc.shape
     _, tn_b = b_loc.shape
@@ -302,14 +328,21 @@ def _sparse_tile_body(
     a_cat = _gather_A(a_loc)
     b_cat = _gather_B(b_loc)
     if kbin is None:
+        mkeys = None
+        if mask is not None:
+            mkeys = sortkeys.sorted_mask_keys(
+                mask.rows, mask.cols, mask.valid_mask(), (tm_a, tn_b)
+            )
         d_tile, ovf_mul = spgemm_esc(
             a_cat, b_cat, out_cap=caps.d_cap, flops_cap=caps.flops_cap,
-            semiring=semiring,
+            semiring=semiring, mask_keys=mkeys,
+            mask_complement=mask_complement,
         )  # (tm, tn_b) sparse, row-major sorted
     else:
         d_tile, ovf_mul = spgemm_kbinned(
             a_cat, b_cat, caps.d_cap, kbin.num_bins, kbin.bin_cap_a,
             kbin.bin_cap_b, bin_of_k=bin_of_k, semiring=semiring,
+            mask=mask, mask_complement=mask_complement,
         )
     # ColSplit (Alg. 2 line 4): one partitioned split into all l pieces,
     # order-preserving (pieces stay row-major sorted), sized by piece_cap
@@ -402,6 +435,7 @@ def summa3d_fused_step(
     b_full: DistSparse,
     batch,
     bin_of_k: Array = None,
+    mask: DistSparse = None,
     *,
     grid: Grid,
     num_batches: int,
@@ -411,6 +445,8 @@ def summa3d_fused_step(
     sorted_merge: bool = True,
     path: str = "sparse",
     kbin: BinnedCaps = None,
+    mask_cap: int = 0,
+    mask_complement: bool = False,
 ):
     """Batch-select + SUMMA3D multiply fused into one SPMD step (Alg. 4
     line 5-6 without the host in the loop).
@@ -422,7 +458,18 @@ def summa3d_fused_step(
     i32[2] device array ``[selection_overflow, multiply_overflow]`` — the
     driver keeps it device-resident and only syncs when it drains its
     pipeline window.
+
+    ``mask`` is an optional C-layout ``DistSparse`` over the full output
+    space (the §V-B masked-SpGEMM operand). It is layer-aligned with C:
+    batch ``bi``'s piece on layer k is exactly local columns
+    [bi·wbl, (bi+1)·wbl) of mask tile (i, j, k), so building the D-tile mask
+    is one batch-slice selection (``mask_cap`` entries, exact from the
+    symbolic mask counts) plus one ``all_gather`` along the fiber — the mask
+    never leaves the grid and one executable still serves every batch. The
+    local multiply then filters partial products before its compress
+    (``mask_complement`` flips strict ⊙M into ⊙¬M).
     """
+    TRACE_COUNTS["fused_step"] += 1
     tm_a, _ = a.tile_shape
     tn_full = b_full.tile_shape[1]
     assert tn_full % num_batches == 0, (tn_full, num_batches)
@@ -432,9 +479,21 @@ def summa3d_fused_step(
     piece_w = wb // l
     if path == "dense":
         assert semiring.add_kind == "sum", "dense path requires a sum monoid"
+    if mask is not None:
+        assert mask.kind in ("A", "C"), mask.kind
+        # C layout: tile (m/pr, n/pc/l); each batch is a wbl-wide slice of it
+        assert mask.tile_shape == (tm_a, tn_full // l), (
+            mask.tile_shape, (tm_a, tn_full // l)
+        )
+        wbl = mask.tile_shape[1] // num_batches
+        assert wbl * num_batches == mask.tile_shape[1], (
+            mask.tile_shape, num_batches
+        )
 
     def step(a_t: DistSparse, b_t: DistSparse, batch_, *rest):
-        bok = rest[0] if rest else None
+        rest = list(rest)
+        bok = rest.pop(0) if kbin is not None else None
+        mask_t = rest.pop(0) if mask is not None else None
         a_loc = _squeeze_tile(a_t)
         b_loc = _squeeze_tile(b_t)
         # Batch-Select (Alg. 4 line 5): block-cyclic column selection
@@ -442,24 +501,51 @@ def summa3d_fused_step(
             batch_, num_batches, l, new_cap=sel_cap
         )
         ovf_sel = _pmax_grid(ovf_sel)
+        mask_cat, ovf_mask = None, jnp.int32(0)
+        if mask_t is not None:
+            # Mask-Select: slice this batch's columns out of the local mask
+            # tile, then gather the l layer pieces along the fiber — layer t
+            # owns D columns [t*wbl, (t+1)*wbl) of the selected batch.
+            m_loc = _squeeze_tile(mask_t)
+            msel, ovf_mask = m_loc.select_col_block(
+                batch_ * wbl, wbl, new_cap=mask_cap
+            )
+            ovf_mask = _pmax_grid(ovf_mask)
+            k_ax = lax.axis_index(LAYER_AX)
+            mv = msel.valid_mask()
+            mrows = jnp.where(mv, msel.rows, tm_a)
+            mcols = jnp.where(mv, k_ax * wbl + msel.cols, wb)
+            g_mr = lax.all_gather(mrows, LAYER_AX).reshape(-1)
+            g_mc = lax.all_gather(mcols, LAYER_AX).reshape(-1)
+            gcap = g_mr.shape[0]
+            # all slots declared live; padding is sentinel-coded (tm, wb)
+            mask_cat = SparseCOO(
+                g_mr, g_mc, jnp.ones((gcap,), jnp.float32),
+                jnp.int32(gcap), (tm_a, wb),
+            )
         if path == "dense":
             a_cat = _gather_A(a_loc)
             b_cat = _gather_B(sel)
             d_tile = spmm(a_cat, b_cat.to_dense(), semiring)
+            if mask_cat is not None:
+                d_tile = jnp.where(
+                    mask_indicator(mask_cat, mask_complement), d_tile, 0.0
+                )
             c_tile = lax.psum_scatter(
                 d_tile, LAYER_AX, scatter_dimension=1, tiled=True
             )
-            return c_tile[None, None, None], jnp.stack([ovf_sel, jnp.int32(0)])
+            return c_tile[None, None, None], jnp.stack([ovf_sel, ovf_mask])
         c_tile, ovf_mul = _sparse_tile_body(
             a_loc, sel, l, caps, semiring, sorted_merge,
             kbin=kbin, bin_of_k=bok,
+            mask=mask_cat, mask_complement=mask_complement,
         )
         return (
             c_tile.rows[None, None, None],
             c_tile.cols[None, None, None],
             c_tile.vals[None, None, None],
             c_tile.nnz[None, None, None],
-            jnp.stack([ovf_sel, _pmax_grid(ovf_mul)]),
+            jnp.stack([ovf_sel, _pmax_grid(ovf_mul) + ovf_mask]),
         )
 
     spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
@@ -469,6 +555,9 @@ def summa3d_fused_step(
     if kbin is not None:
         in_specs.append(spec0)
         args.append(bin_of_k)
+    if mask is not None:
+        in_specs.append(dist_spec(mask, spec3))
+        args.append(mask)
     if path == "dense":
         out_specs = (spec3, spec0)
     else:

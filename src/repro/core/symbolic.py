@@ -207,6 +207,17 @@ def rup8(x: int) -> int:
     return ((x + 7) // 8) * 8
 
 
+def rup_pow2(x: int) -> int:
+    """Round up to the next power of two.
+
+    Capacity quantization for iterated multiplies (MCL, §V-C): per-iteration
+    nnz drift would otherwise produce a fresh ``BatchCaps`` — and a fresh
+    compile of the fused SPMD step — every iteration. Pow2 buckets collapse
+    nearby capacity plans onto one static signature so the jit cache hits.
+    """
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
 def estimate_mem_c_bytes(flops: int, compression_factor: float, r: int) -> int:
     """mem(C) = r * Σ_k nnz(D^k); bounded by r*flops (no merging, worst case)
     and approximated by r*flops/cf_layer when layer-level merging is counted."""

@@ -1,30 +1,59 @@
 """SpGEMM applications from paper §V-B: triangle counting and AA^T overlap.
 
-Triangle counting (app (b)): count(G) = Σ (L·U) ⊙ A / 1, with the masked
-plus-pair semiring — reproduces the "AA captures triangle counting" claim.
+Triangle counting (app (b)): count(G) = Σ (L·U) ⊙ L with L/U the strict
+lower/upper parts of the adjacency matrix — a *masked* SpGEMM. The mask is
+scattered once as a C-layout operand and applied INSIDE the batched multiply
+(``batched_summa3d(mask=...)``): the symbolic step budgets only surviving
+entries (smaller capacities, fewer batches) and the local multiply filters
+partial products against the mask's packed keys before its compress, so
+non-triangle products never occupy output capacity, never ride the fiber
+all-to-all, and never reach the host. Per-batch sums come back as device
+scalars (like MCL's chaos/nnz) — the host sees one number per batch.
 
 Overlap detection (app (c), BELLA/PASTIS): C = A·Aᵀ over plus-times where A
 is the (sequences × k-mers) indicator matrix; C[i,j] = shared k-mers between
-sequences i and j. Batched column formation lets the pair list be consumed
-(filtered by min shared k-mers) batch-by-batch without holding all of C.
+sequences i and j. The BELLA filter (i < j, shared ≥ min_shared) runs as a
+device-side postprocess on each batch — a jitted on-grid compact, one
+executable for all batches — so only surviving pairs are ever transferred;
+an optional ``candidates`` mask (known candidate pairs, the PASTIS regime)
+additionally gates the multiply itself through the masked path.
+
+``triangle_count_host`` / ``overlap_pairs_host`` keep the original
+pull-every-batch, filter-in-Python implementations as parity oracles; their
+per-entry filters are routed through ``_host_mask_filter`` /
+``_host_pair_filter`` so tests can count (and forbid) host-side filtering on
+the device paths.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from functools import partial
+from typing import List, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
+from ..compat import shard_map
 from ..core import semiring as sr
 from ..core.batched import batched_summa3d
-from ..core.distsparse import scatter_to_grid
-from ..core.grid import Grid
+from ..core.distsparse import DistSparse, dist_spec, scatter_to_grid
+from ..core.grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from ..core.sparse import SparseCOO, from_numpy_coo
-from .mcl import _sparse_batch_to_global
+from ..core.summa3d import _pmax_grid, _psum_grid, _squeeze_tile
+from . import mcl as _mcl
+from .mcl import _sparse_batch_to_global, _to_host
 
 
-def triangle_count(a: SparseCOO, grid: Grid,
-                   per_process_memory: int = 1 << 26) -> int:
-    """Σ_{(i,j) ∈ A, i>j} (L·U)[i,j] — L/U strict lower/upper parts."""
+def _charge_mask_planning_transfer(mask: DistSparse) -> None:
+    """Masked planning pulls the mask's column structure to host once
+    (``batched._mask_tile_colcounts``); charge those bytes against the
+    transfer accounting so the device-vs-host comparisons stay honest."""
+    _mcl._TRANSFER_BYTES[0] += mask.cols.nbytes + mask.nnz.nbytes
+
+
+def _strict_parts(a: SparseCOO) -> Tuple[SparseCOO, SparseCOO]:
+    """Strict lower (L) and upper (U) triangular parts as unit-weight COO."""
     n = a.shape[0]
     nnz = int(a.nnz)
     rows = np.asarray(a.rows[:nnz])
@@ -35,7 +64,123 @@ def triangle_count(a: SparseCOO, grid: Grid,
                        (n, n), cap=max(int(lo.sum()), 8))
     U = from_numpy_coo(rows[hi], cols[hi], np.ones(hi.sum(), np.float32),
                        (n, n), cap=max(int(hi.sum()), 8))
-    mask = set(zip(rows[lo].tolist(), cols[lo].tolist()))  # strict lower of A
+    return L, U
+
+
+# ---------------------------------------------------------------------------
+# Device-side per-batch reductions / filters (the §V-B consumption hooks)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("grid",))
+def _batch_value_sum(c: DistSparse, grid: Grid):
+    """Σ of one batch's values as a replicated DEVICE scalar (one f32 per
+    batch crosses to the host — the masked triangle count's only traffic)."""
+
+    def step(c_t: DistSparse):
+        t = _squeeze_tile(c_t)
+        return _psum_grid(jnp.sum(jnp.where(t.valid_mask(), t.vals, 0.0)))
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    fn = shard_map(step, mesh=grid.mesh, in_specs=(dist_spec(c, spec3),),
+                   out_specs=jax.sharding.PartitionSpec(), check_vma=False)
+    return fn(c)
+
+
+@partial(jax.jit, static_argnames=("grid", "num_batches", "min_shared"))
+def _overlap_filter(
+    c: DistSparse, batch, grid: Grid, num_batches: int, min_shared: int
+):
+    """BELLA pair filter ON the grid: keep entries with global row < global
+    col and value ≥ ``min_shared``, compacted in place. ``batch`` stays a
+    traced scalar (one executable for every batch). Returns the filtered
+    batch plus replicated device scalars (surviving count, compact overflow).
+    """
+    tm, wbl = c.tile_shape
+    n_total = c.shape[1] * num_batches
+    w = n_total // grid.pc
+
+    def step(c_t: DistSparse, batch_):
+        t = _squeeze_tile(c_t)
+        i = lax.axis_index(ROW_AX)
+        j = lax.axis_index(COL_AX)
+        k = lax.axis_index(LAYER_AX)
+        g_row = i * tm + t.rows
+        g_col = j * w + (k * num_batches + batch_) * wbl + t.cols
+        keep = t.valid_mask() & (t.vals >= min_shared) & (g_row < g_col)
+        kept, ovf = t.compact(keep, t.cap)
+        return (
+            kept.rows[None, None, None],
+            kept.cols[None, None, None],
+            kept.vals[None, None, None],
+            kept.nnz[None, None, None],
+            _psum_grid(jnp.sum(keep.astype(jnp.int32))),
+            _pmax_grid(ovf),
+        )
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    spec0 = jax.sharding.PartitionSpec()
+    fn = shard_map(step, mesh=grid.mesh,
+                   in_specs=(dist_spec(c, spec3), spec0),
+                   out_specs=(spec3,) * 4 + (spec0,) * 2, check_vma=False)
+    rows, cols, vals, nnz, cnt, ovf = fn(c, jnp.int32(batch))
+    filtered = DistSparse(rows=rows, cols=cols, vals=vals, nnz=nnz,
+                          shape=c.shape, tile_shape=c.tile_shape,
+                          grid_shape=c.grid_shape, kind=c.kind)
+    return filtered, cnt, ovf
+
+
+# ---------------------------------------------------------------------------
+# Triangle counting — masked SpGEMM, device-resident
+# ---------------------------------------------------------------------------
+def triangle_count(a: SparseCOO, grid: Grid,
+                   per_process_memory: int = 1 << 26) -> int:
+    """Σ_{(i,j) ∈ A, i>j} (L·U)[i,j] via the masked batched multiply.
+
+    The A-mask (element-wise ⊙) is the strict lower part L, scattered as a
+    C-layout operand and applied on-grid inside every batch's fused step;
+    each batch contributes ONE device scalar to the total.
+    """
+    L, U = _strict_parts(a)
+    A_d = scatter_to_grid(L, grid, "A")
+    B_d = scatter_to_grid(U, grid, "B")
+    M_d = scatter_to_grid(L, grid, "C")
+    _charge_mask_planning_transfer(M_d)
+    totals: List[float] = []
+
+    def postprocess(bi, c_batch):
+        return _batch_value_sum(c_batch, grid=grid)
+
+    def consumer(bi, batch_sum, col_map):
+        totals.append(float(_to_host(batch_sum)))
+        return None
+
+    batched_summa3d(
+        A_d, B_d, grid, per_process_memory=per_process_memory,
+        consumer=consumer, path="sparse", semiring=sr.PLUS_TIMES,
+        mask=M_d, postprocess=postprocess,
+    )
+    return int(round(sum(totals)))
+
+
+def _host_mask_filter(rr, cc, vv, mask) -> int:
+    """Per-entry host mask filter — the kept §V-B oracle (and the thing the
+    device path must never call; tests patch this to count invocations)."""
+    total = 0
+    for r, c, v in zip(rr.tolist(), cc.tolist(), vv.tolist()):
+        if (r, c) in mask:  # apply the A-mask (element-wise ⊙)
+            total += int(round(v))
+    return total
+
+
+def triangle_count_host(a: SparseCOO, grid: Grid,
+                        per_process_memory: int = 1 << 26) -> int:
+    """Host-filter reference: full (unmasked) L·U product, every batch pulled
+    to numpy and masked by a Python set lookup — the pre-masked-path
+    implementation, kept as the parity oracle and transfer baseline."""
+    nnz = int(a.nnz)
+    rows = np.asarray(a.rows[:nnz])
+    cols = np.asarray(a.cols[:nnz])
+    L, U = _strict_parts(a)
+    mask = set(zip(rows[rows > cols].tolist(), cols[rows > cols].tolist()))
 
     A_d = scatter_to_grid(L, grid, "A")
     B_d = scatter_to_grid(U, grid, "B")
@@ -44,9 +189,7 @@ def triangle_count(a: SparseCOO, grid: Grid,
     def consumer(bi, c_batch, col_map):
         nonlocal total
         rr, cc, vv = _sparse_batch_to_global(c_batch, col_map)
-        for r, c, v in zip(rr.tolist(), cc.tolist(), vv.tolist()):
-            if (r, c) in mask:  # apply the A-mask (element-wise ⊙)
-                total += int(round(v))
+        total += _host_mask_filter(rr, cc, vv, mask)
 
     batched_summa3d(
         A_d, B_d, grid, per_process_memory=per_process_memory,
@@ -62,14 +205,91 @@ def triangle_count_reference(a: SparseCOO) -> int:
     return int(np.trace(d @ d @ d)) // 6
 
 
+# ---------------------------------------------------------------------------
+# Overlap detection — on-grid BELLA filter (+ optional candidate mask)
+# ---------------------------------------------------------------------------
 def overlap_pairs(
     a: SparseCOO,  # (nseqs × nkmers) indicator
     grid: Grid,
     min_shared: int = 2,
     per_process_memory: int = 1 << 26,
+    candidates: Optional[SparseCOO] = None,
 ) -> List[Tuple[int, int, int]]:
     """AA^T batched; emit (i, j, shared) pairs with shared >= min_shared,
-    i < j. Each batch is filtered and discarded (memory-constrained use)."""
+    i < j. Each batch is filtered ON the grid and discarded
+    (memory-constrained use): the device postprocess compacts survivors and
+    reduces the surviving-pair count to a scalar, so the host only
+    reassembles coordinates — it never filters.
+
+    ``candidates`` (an nseqs × nseqs structural mask of known candidate
+    pairs, the PASTIS regime) additionally gates the multiply itself via the
+    masked path — non-candidate products are dropped before the compress and
+    the plan budgets survivors only.
+    """
+    at = a.transpose().sort_rowmajor()
+    A_d = scatter_to_grid(a, grid, "A")
+    B_d = scatter_to_grid(at, grid, "B")
+    M_d = (
+        scatter_to_grid(candidates, grid, "C")
+        if candidates is not None else None
+    )
+    if M_d is not None:
+        _charge_mask_planning_transfer(M_d)
+    pieces = []
+    nseqs = a.shape[0]
+
+    def postprocess(bi, c_batch):
+        # the batch width is the column dimension divided by the plan's
+        # batch count, so nb is recoverable from the batch itself — no
+        # plan probe needed before the driver runs
+        num_batches = nseqs // c_batch.shape[1]
+        return _overlap_filter(
+            c_batch, bi, grid=grid, num_batches=num_batches,
+            min_shared=int(min_shared),
+        )
+
+    def consumer(bi, payload, col_map):
+        filtered, cnt, ovf = payload
+        assert int(_to_host(ovf)) == 0
+        rr, cc, vv = _sparse_batch_to_global(filtered, col_map)
+        assert len(rr) == int(_to_host(cnt)), (len(rr), cnt)
+        pieces.append((rr, cc, vv))
+        return None
+
+    batched_summa3d(
+        A_d, B_d, grid, per_process_memory=per_process_memory,
+        consumer=consumer, path="sparse", postprocess=postprocess,
+        mask=M_d,
+    )
+    rows = np.concatenate([p[0] for p in pieces])
+    cols = np.concatenate([p[1] for p in pieces])
+    vals = np.concatenate([p[2] for p in pieces])
+    order = np.lexsort((cols, rows))
+    return [
+        (int(r), int(c), int(round(v)))
+        for r, c, v in zip(rows[order], cols[order], vals[order])
+    ]
+
+
+def _host_pair_filter(rr, cc, vv, min_shared) -> List[Tuple[int, int, int]]:
+    """Per-entry host pair filter — the kept §V-B oracle (patched by tests
+    to prove the device path never filters on the host)."""
+    out = []
+    for r, c, v in zip(rr.tolist(), cc.tolist(), vv.tolist()):
+        if r < c and v >= min_shared:
+            out.append((int(r), int(c), int(round(v))))
+    return out
+
+
+def overlap_pairs_host(
+    a: SparseCOO,
+    grid: Grid,
+    min_shared: int = 2,
+    per_process_memory: int = 1 << 26,
+) -> List[Tuple[int, int, int]]:
+    """Host-filter reference: every full batch pulled to numpy and filtered
+    entry-by-entry in Python — the pre-device-filter implementation, kept as
+    the parity oracle and transfer baseline."""
     at = a.transpose().sort_rowmajor()
     A_d = scatter_to_grid(a, grid, "A")
     B_d = scatter_to_grid(at, grid, "B")
@@ -77,9 +297,8 @@ def overlap_pairs(
 
     def consumer(bi, c_batch, col_map):
         rr, cc, vv = _sparse_batch_to_global(c_batch, col_map)
-        for r, c, v in zip(rr.tolist(), cc.tolist(), vv.tolist()):
-            if r < c and v >= min_shared:
-                pairs.append((int(r), int(c), int(round(v))))
+        pairs.extend(_host_pair_filter(rr, cc, vv, min_shared))
+        return None
 
     batched_summa3d(
         A_d, B_d, grid, per_process_memory=per_process_memory,

@@ -57,7 +57,12 @@ from ..core.batched import batched_summa3d
 from ..core.distsparse import DistSparse, dist_spec, local_col_reduce
 from ..core.grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from ..core.sparse import SparseCOO, from_numpy_coo
-from ..core.summa3d import _pmax_grid, _squeeze_tile, reassemble_operands
+from ..core.summa3d import (
+    _pmax_grid,
+    _psum_grid,
+    _squeeze_tile,
+    reassemble_operands,
+)
 from ..core.symbolic import rup8 as _rup8
 from ..kernels.col_prune import THRESH_ITERS, col_topk_bounds_pallas
 
@@ -74,6 +79,7 @@ class MCLConfig:
     force_num_batches: Optional[int] = None  # None: symbolic-step planning
     lookahead: int = 2  # pipelined driver window
     r_bytes: int = 12  # bytes per stored nonzero (COO: i32+i32+f32)
+    binned: object = "auto"  # sparse local multiply: "auto" | True | False
 
 
 # ---------------------------------------------------------------------------
@@ -271,12 +277,7 @@ def _mcl_prune_sparse(
         colmax2 = local_col_reduce(v2, t.cols, keep, tn, "max", (ROW_AX,))
         colsq2 = local_col_reduce(v2 * v2, t.cols, keep, tn, "sum", (ROW_AX,))
         chaos = _pmax_grid(jnp.max(colmax2 - colsq2))
-        nnz = lax.psum(
-            lax.psum(
-                lax.psum(jnp.sum(keep.astype(jnp.int32)), ROW_AX), COL_AX
-            ),
-            LAYER_AX,
-        )
+        nnz = _psum_grid(jnp.sum(keep.astype(jnp.int32)))
         pruned, ovf = SparseCOO(t.rows, t.cols, v2, t.nnz, (tm, tn)).compact(
             keep, new_cap
         )
@@ -336,12 +337,7 @@ def _mcl_prune_dense(c_tiles, grid: Grid, inflation: float, thresh: float, k: in
         colmax = lax.pmax(jnp.max(t, axis=0), ROW_AX)
         colsq = lax.psum(jnp.sum(t * t, axis=0), ROW_AX)
         chaos = _pmax_grid(jnp.max(colmax - colsq))
-        nnz = lax.psum(
-            lax.psum(
-                lax.psum(jnp.sum((t > 0).astype(jnp.int32)), ROW_AX), COL_AX
-            ),
-            LAYER_AX,
-        )
+        nnz = _psum_grid(jnp.sum((t > 0).astype(jnp.int32)))
         return t[None, None, None], chaos, nnz
 
     spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
@@ -391,6 +387,18 @@ def mcl_iterate(
     A = _scatter(a, grid, "A")
     B = _scatter(a, grid, "B")
     history: List[dict] = []
+    # pow2-quantized + monotone (running max) capacities: per-iteration nnz
+    # drift then maps onto ONE static signature for the fused step, so every
+    # iteration after the first hits the jit cache (ROADMAP MCL (b); the
+    # compile-count contract is asserted in tests/test_mcl_pipeline.py).
+    # The k-binned local multiply is part of that signature, so its on/off
+    # decision, bin count, and bin capacities are pinned after iteration 1.
+    caps_floor = None
+    sel_floor = 0
+    nb_floor = 0
+    binned_arg = cfg.binned
+    kbin_candidates = None
+    kb_floor = None
     for it in range(cfg.max_iters):
         t0_bytes = transfer_bytes()
         t0 = time.perf_counter()
@@ -417,8 +425,17 @@ def mcl_iterate(
             consumer=consumer, path="sparse",
             postprocess=postprocess, reserved_bytes=reserved,
             force_num_batches=cfg.force_num_batches,
-            lookahead=cfg.lookahead, r_bytes=cfg.r_bytes,
+            lookahead=cfg.lookahead, r_bytes=cfg.r_bytes, binned=binned_arg,
+            caps_pow2=True, caps_floor=caps_floor, sel_cap_floor=sel_floor,
+            num_batches_floor=nb_floor,
+            kbin_candidates=kbin_candidates, kbin_caps_floor=kb_floor,
         )
+        caps_floor, sel_floor = res.plan.caps, res.plan.sel_cap
+        nb_floor = res.plan.num_batches
+        binned_arg = res.binned  # pin the auto decision from iteration 1
+        if res.binned_caps is not None:
+            kbin_candidates = (res.binned_caps.num_bins,)
+            kb_floor = res.binned_caps
         A, B, ovf = reassemble_operands(tuple(batches), grid, cap_a, cap_b)
         # ONE host sync per iteration, scalars only (convergence check)
         chaos = max(float(_to_host(st["chaos"])) for st in stats)
@@ -443,6 +460,9 @@ def _mcl_iterate_dense(
     n = a.shape[0]
     cur = a
     history: List[dict] = []
+    caps_floor = None
+    sel_floor = 0
+    nb_floor = 0
     for it in range(cfg.max_iters):
         t0_bytes = transfer_bytes()
         t0 = time.perf_counter()
@@ -469,7 +489,11 @@ def _mcl_iterate_dense(
             consumer=consumer, path="dense", postprocess=postprocess,
             force_num_batches=cfg.force_num_batches,
             lookahead=cfg.lookahead, r_bytes=cfg.r_bytes,
+            caps_pow2=True, caps_floor=caps_floor, sel_cap_floor=sel_floor,
+            num_batches_floor=nb_floor,
         )
+        caps_floor, sel_floor = res.plan.caps, res.plan.sel_cap
+        nb_floor = res.plan.num_batches
         rows = np.concatenate([p[0] for p in pieces])
         cols = np.concatenate([p[1] for p in pieces])
         vals = np.concatenate([p[2] for p in pieces]).astype(np.float32)

@@ -11,8 +11,10 @@ from repro.core import gen
 from repro.core.grid import make_grid
 from repro.sparse_apps.graph_algorithms import (
     overlap_pairs,
+    overlap_pairs_host,
     overlap_pairs_reference,
     triangle_count,
+    triangle_count_host,
     triangle_count_reference,
 )
 from repro.sparse_apps.mcl import (
@@ -210,22 +212,128 @@ def case_mcl_no_host_roundtrip():
 
 def case_triangle_count_exact():
     grid = make_grid(2, 2, 2)
-    a = gen.erdos_renyi(48, 6.0, seed=9)
-    # symmetrize
-    nnz = int(a.nnz)
-    rows = np.asarray(a.rows[:nnz])
-    cols = np.asarray(a.cols[:nnz])
-    from repro.core.sparse import from_numpy_coo
-
-    r2 = np.concatenate([rows, cols])
-    c2 = np.concatenate([cols, rows])
-    keep = r2 != c2
-    a = from_numpy_coo(r2[keep], c2[keep], np.ones(keep.sum(), np.float32),
-                       (48, 48))
+    a = gen.symmetrized(gen.erdos_renyi(48, 6.0, seed=9))
     got = triangle_count(a, grid)
     want = triangle_count_reference(a)
     assert got == want, (got, want)
     print(f"OK triangle_count_exact (triangles={got})")
+
+
+def case_triangle_masked_rmat():
+    """Masked triangle counting on R-MAT skew at 8 devices: the on-device
+    masked path matches both the host-filter oracle and the dense reference,
+    the masked plan needs strictly fewer batches and strictly smaller
+    capacities than the unmasked plan under the same memory budget, and the
+    device path performs ZERO host-side per-entry filtering (call-counted
+    like ``mcl_no_host_roundtrip``)."""
+    from repro.core.batched import plan_batches, probe_memory_budget
+    from repro.core.distsparse import scatter_to_grid
+    from repro.sparse_apps import graph_algorithms as ga
+    from repro.sparse_apps.mcl import reset_transfer_bytes, transfer_bytes
+
+    grid = make_grid(2, 2, 2)
+    a = gen.symmetrized(gen.rmat(6, edge_factor=8, seed=5))  # n=64, power-law
+    want = triangle_count_reference(a)
+
+    # --- plan comparison under a budget that forces the unmasked run to batch
+    L, U = ga._strict_parts(a)
+    A_d = scatter_to_grid(L, grid, "A")
+    B_d = scatter_to_grid(U, grid, "B")
+    M_d = scatter_to_grid(L, grid, "C")
+    ppm = probe_memory_budget(A_d, B_d, grid)  # unmasked b ~ 3-4
+    pu = plan_batches(A_d, B_d, grid, per_process_memory=ppm)
+    pm = plan_batches(A_d, B_d, grid, per_process_memory=ppm, mask=M_d)
+    assert pu.num_batches > 1, pu.num_batches
+    assert pm.num_batches < pu.num_batches, (pm.num_batches, pu.num_batches)
+    assert pm.caps.d_cap < pu.caps.d_cap, (pm.caps, pu.caps)
+    assert pm.caps.c_cap < pu.caps.c_cap, (pm.caps, pu.caps)
+
+    # --- device path: no host-side per-entry filtering, scalars-only traffic
+    calls = {"mask_filter": 0, "to_global": 0}
+    real_filter = ga._host_mask_filter
+    real_to_global = ga._sparse_batch_to_global
+
+    def counting_filter(*args, **kwargs):
+        calls["mask_filter"] += 1
+        return real_filter(*args, **kwargs)
+
+    def counting_to_global(*args, **kwargs):
+        calls["to_global"] += 1
+        return real_to_global(*args, **kwargs)
+
+    ga._host_mask_filter = counting_filter
+    ga._sparse_batch_to_global = counting_to_global
+    try:
+        reset_transfer_bytes()
+        got = triangle_count(a, grid, per_process_memory=ppm)
+        device_bytes = transfer_bytes()
+        assert calls == {"mask_filter": 0, "to_global": 0}, calls
+        reset_transfer_bytes()
+        got_host = triangle_count_host(a, grid, per_process_memory=ppm)
+        host_bytes = transfer_bytes()
+        assert calls["mask_filter"] > 0 and calls["to_global"] > 0, calls
+    finally:
+        ga._host_mask_filter = real_filter
+        ga._sparse_batch_to_global = real_to_global
+    assert got == want == got_host, (got, want, got_host)
+    # device path: one scalar per batch + the one-time mask-structure pull
+    # the planner makes (counted); host oracle moves every full batch
+    mask_pull = M_d.cols.nbytes + M_d.nnz.nbytes
+    assert device_bytes <= mask_pull + 64, (device_bytes, mask_pull)
+    assert host_bytes > 10 * device_bytes, (host_bytes, device_bytes)
+    print(f"OK triangle_masked_rmat (triangles={got}, "
+          f"batches {pm.num_batches}<{pu.num_batches}, "
+          f"bytes {device_bytes}<<{host_bytes})")
+
+
+def case_masked_multibatch_grid():
+    """The masked fused step's mask-slice ↔ block-cyclic-batch alignment is
+    only nontrivial when num_batches > 1 AND layers > 1 (the batch slice is
+    fiber-gathered with per-layer column offsets): exact parity with the
+    dense reference at nb ∈ {2, 4} × {strict, complement} on the 2x2x2
+    grid, including the k-binned local multiply."""
+    import jax.numpy as jnp
+
+    from repro.core.batched import batched_summa3d
+    from repro.core.distsparse import scatter_to_grid
+    from repro.core.sparse import from_dense, from_numpy_coo
+    from repro.sparse_apps.mcl import _sparse_batch_to_global
+
+    grid = make_grid(2, 2, 2)
+    n = 64
+    rng = np.random.default_rng(41)
+    xa = np.where(rng.random((n, n)) < 0.2,
+                  rng.uniform(0.5, 1, (n, n)), 0).astype(np.float32)
+    xb = np.where(rng.random((n, n)) < 0.2,
+                  rng.uniform(0.5, 1, (n, n)), 0).astype(np.float32)
+    mask_dense = rng.random((n, n)) < 0.15
+    mr, mc = np.nonzero(mask_dense)
+    A = scatter_to_grid(from_dense(jnp.asarray(xa), cap=1024), grid, "A")
+    B = scatter_to_grid(from_dense(jnp.asarray(xb), cap=1024), grid, "B")
+    M = scatter_to_grid(
+        from_numpy_coo(mr, mc, np.ones(len(mr), np.float32), (n, n)),
+        grid, "C",
+    )
+    for complement in (False, True):
+        for nb in (2, 4):
+            for binned in ("auto", True, False):
+                got = np.zeros((n, n), np.float32)
+
+                def consumer(bi, c, cm):
+                    rr, cc, vv = _sparse_batch_to_global(c, cm)
+                    got[rr, cc] += vv
+
+                res = batched_summa3d(
+                    A, B, grid, per_process_memory=1 << 26,
+                    consumer=consumer, path="sparse", force_num_batches=nb,
+                    mask=M, mask_complement=complement, binned=binned,
+                )
+                keep = ~mask_dense if complement else mask_dense
+                np.testing.assert_allclose(
+                    got, (xa @ xb) * keep, rtol=1e-4, atol=1e-4,
+                )
+                assert res.num_retries == 0, (complement, nb, binned)
+    print("OK masked_multibatch_grid")
 
 
 def case_overlap_pairs_exact():
@@ -235,6 +343,58 @@ def case_overlap_pairs_exact():
     want = overlap_pairs_reference(a, min_shared=2)
     assert got == want, (len(got), len(want))
     print(f"OK overlap_pairs_exact (pairs={len(got)})")
+
+
+def case_overlap_device_filter():
+    """Overlap detection with the BELLA filter applied ON the grid: parity
+    with the host-filter oracle and the dense reference, zero host-side
+    per-entry filtering on the device path (call-counted), and the optional
+    candidate-pair mask (PASTIS regime) gating the multiply itself."""
+    from repro.core.sparse import from_numpy_coo
+    from repro.sparse_apps import graph_algorithms as ga
+
+    grid = make_grid(2, 2, 2)
+    a = gen.kmer_like(32, 64, 5, seed=31)
+    want = overlap_pairs_reference(a, min_shared=2)
+
+    calls = {"pair_filter": 0}
+    real_filter = ga._host_pair_filter
+
+    def counting_filter(*args, **kwargs):
+        calls["pair_filter"] += 1
+        return real_filter(*args, **kwargs)
+
+    ga._host_pair_filter = counting_filter
+    try:
+        got = overlap_pairs(a, grid, min_shared=2)
+        assert calls["pair_filter"] == 0, calls
+        got_host = overlap_pairs_host(a, grid, min_shared=2)
+        assert calls["pair_filter"] > 0, calls
+    finally:
+        ga._host_pair_filter = real_filter
+    assert got == want == got_host, (len(got), len(want), len(got_host))
+
+    # candidate mask (PASTIS): candidates ⊇ true pairs reproduces the full
+    # result; candidates ⊂ true pairs restricts the output to the mask.
+    nseqs = a.shape[0]
+    rng = np.random.default_rng(3)
+    extra_r = rng.integers(0, nseqs, 40)
+    extra_c = rng.integers(0, nseqs, 40)
+    cr = np.concatenate([[p[0] for p in want], extra_r])
+    cc = np.concatenate([[p[1] for p in want], extra_c])
+    cands = from_numpy_coo(cr, cc, np.ones(len(cr), np.float32),
+                           (nseqs, nseqs))
+    got_c = overlap_pairs(a, grid, min_shared=2, candidates=cands)
+    assert got_c == want, (len(got_c), len(want))
+    half = want[: len(want) // 2]
+    cands_half = from_numpy_coo(
+        np.array([p[0] for p in half]), np.array([p[1] for p in half]),
+        np.ones(len(half), np.float32), (nseqs, nseqs),
+    )
+    got_h = overlap_pairs(a, grid, min_shared=2, candidates=cands_half)
+    assert got_h == half, (len(got_h), len(half))
+    print(f"OK overlap_device_filter (pairs={len(got)}, "
+          f"candidates {len(got_c)}/{len(got_h)})")
 
 
 CASES = {n[len("case_"):]: f for n, f in list(globals().items())

@@ -190,3 +190,52 @@ class TestDeviceLoopSingleDevice:
             [h["chaos"] for h in hist_d], [h["chaos"] for h in hist_h],
             rtol=1e-3, atol=1e-5,
         )
+
+
+class TestFusedStepCompileCount:
+    def test_pow2_caps_hit_jit_cache(self, grid1, n=24):
+        """ROADMAP MCL follow-up (b): per-iteration capacity drift must NOT
+        recompile the fused step. With pow2-quantized, running-max floored
+        capacities (and the k-bin signature pinned after iteration 1) a
+        4-iteration MCL run traces the fused step at most twice — iteration
+        1's scattered operands vs. the reassembled operands of iterations
+        2+ — and a repeat run of the same loop traces NOTHING."""
+        from repro.core import summa3d
+
+        x = _dense_mat(n, 0.5, seed=23)
+        rr, cc = np.nonzero(x)
+        vv = _col_normalize_np(rr, cc, x[rr, cc].astype(np.float64), n)
+        a = sp.from_numpy_coo(rr, cc, vv.astype(np.float32), (n, n))
+        cfg = MCLConfig(max_iters=4, per_process_memory=1 << 24,
+                        max_per_col=8, force_num_batches=2)
+        t0 = summa3d.TRACE_COUNTS["fused_step"]
+        _, hist = mcl_iterate(a, grid1, cfg)
+        assert len(hist) == 4, "need a multi-iteration run to prove caching"
+        first = summa3d.TRACE_COUNTS["fused_step"] - t0
+        assert first <= 2, f"fused step traced {first}x in one MCL run"
+        t1 = summa3d.TRACE_COUNTS["fused_step"]
+        _, hist2 = mcl_iterate(a, grid1, cfg)
+        assert len(hist2) == 4
+        repeat = summa3d.TRACE_COUNTS["fused_step"] - t1
+        assert repeat == 0, f"repeat run recompiled the fused step {repeat}x"
+
+    def test_unforced_batch_count_pinned(self, grid1, n=24):
+        """With memory-driven planning (force_num_batches=None, the default
+        config) the batch count is floored at its running max, so a
+        sparsifying iterate cannot shrink nb mid-run and re-trace; the
+        repeat-run contract holds for the default config too."""
+        from repro.core import summa3d
+
+        x = _dense_mat(n, 0.6, seed=29)
+        rr, cc = np.nonzero(x)
+        vv = _col_normalize_np(rr, cc, x[rr, cc].astype(np.float64), n)
+        a = sp.from_numpy_coo(rr, cc, vv.astype(np.float32), (n, n))
+        cfg = MCLConfig(max_iters=4, per_process_memory=1 << 17, max_per_col=4)
+        _, hist = mcl_iterate(a, grid1, cfg)
+        assert len(hist) >= 3
+        nbs = [h["batches"] for h in hist]
+        assert nbs == sorted(nbs), f"batch count shrank mid-run: {nbs}"
+        t0 = summa3d.TRACE_COUNTS["fused_step"]
+        mcl_iterate(a, grid1, cfg)
+        repeat = summa3d.TRACE_COUNTS["fused_step"] - t0
+        assert repeat == 0, f"repeat run recompiled the fused step {repeat}x"

@@ -17,7 +17,10 @@ CASES = [
     "mcl_tied_topk_distributed",
     "mcl_no_host_roundtrip",
     "triangle_count_exact",
+    "triangle_masked_rmat",
+    "masked_multibatch_grid",
     "overlap_pairs_exact",
+    "overlap_device_filter",
 ]
 
 

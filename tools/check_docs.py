@@ -1,0 +1,160 @@
+"""Dependency-free markdown lint + link check for the repo docs.
+
+Covers ``README.md``, ``ROADMAP.md``, ``CHANGES.md``, ``PAPER.md`` and
+everything under ``docs/``. Checks, per file:
+
+  * relative markdown links/images resolve to an existing file or directory
+    (external http(s)/mailto links are NOT fetched — no network in CI);
+  * intra-document anchors (``[x](#section)`` and ``[x](file.md#section)``)
+    match a heading in the target file (GitHub slug rules: lowercase,
+    punctuation stripped, spaces -> dashes);
+  * fenced code blocks are balanced (every ``` opener has a closer);
+  * no literal tab characters (the repo is space-indented, and tabs render
+    inconsistently in markdown code spans).
+
+Usage::
+
+    python tools/check_docs.py [files...]
+
+With no arguments, checks the default doc set. Exits nonzero listing every
+violation — the CI docs lane runs exactly this.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+DEFAULT_DOCS = ("README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md")
+
+# [text](target) and ![alt](target); target may carry a #anchor
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip punctuation, lowercase, spaces->dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.lower().replace(" ", "-")
+
+
+def _strip_fences(lines):
+    """Lines outside fenced code blocks (links inside fences aren't links)."""
+    out, in_fence, fence_tok = [], False, None
+    for ln in lines:
+        m = _FENCE_RE.match(ln.strip())
+        if m:
+            tok = m.group(1)
+            if not in_fence:
+                in_fence, fence_tok = True, tok
+            elif tok == fence_tok:
+                in_fence, fence_tok = False, None
+            continue
+        if not in_fence:
+            out.append(ln)
+    return out
+
+
+def _headings(path: pathlib.Path):
+    try:
+        lines = path.read_text().splitlines()
+    except (OSError, UnicodeDecodeError):
+        return set()
+    return {
+        github_slug(m.group(2))
+        for ln in _strip_fences(lines)
+        if (m := _HEADING_RE.match(ln))
+    }
+
+
+def _display_path(path: pathlib.Path) -> str:
+    """Repo-relative when inside the checkout, absolute otherwise (the CLI
+    accepts arbitrary file arguments)."""
+    try:
+        return str(path.relative_to(REPO_ROOT))
+    except ValueError:
+        return str(path)
+
+
+def check_file(path: pathlib.Path) -> list:
+    errors = []
+    rel = _display_path(path)
+    try:
+        text = path.read_text()
+    except (OSError, UnicodeDecodeError) as e:
+        return [f"{rel}: unreadable ({e})"]
+    lines = text.splitlines()
+
+    # fence balance: per-token open/close state (a ``` block may contain a
+    # literal ~~~ line and vice versa — same walk as _strip_fences)
+    open_tok = None
+    for ln in lines:
+        m = _FENCE_RE.match(ln.strip())
+        if not m:
+            continue
+        tok = m.group(1)
+        if open_tok is None:
+            open_tok = tok
+        elif tok == open_tok:
+            open_tok = None
+    if open_tok is not None:
+        errors.append(
+            f"{rel}: unbalanced fenced code block ({open_tok} left open)"
+        )
+
+    for i, ln in enumerate(lines, 1):
+        if "\t" in ln:
+            errors.append(f"{rel}:{i}: literal tab character")
+
+    for m in _LINK_RE.finditer("\n".join(_strip_fences(lines))):
+        target = m.group(1)
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, https:, mailto:
+            continue
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        if target:
+            dest = (path.parent / target).resolve()
+            if not dest.exists():
+                errors.append(f"{rel}: broken link -> {m.group(1)}")
+                continue
+        else:
+            dest = path
+        if frag is not None and dest.suffix == ".md":
+            if github_slug(frag) not in _headings(dest):
+                errors.append(f"{rel}: broken anchor -> {m.group(1)}")
+    return errors
+
+
+def default_paths():
+    paths = [REPO_ROOT / name for name in DEFAULT_DOCS
+             if (REPO_ROOT / name).exists()]
+    docs_dir = REPO_ROOT / "docs"
+    if docs_dir.is_dir():
+        paths.extend(sorted(docs_dir.rglob("*.md")))
+    return paths
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    paths = [pathlib.Path(p).resolve() for p in argv] or default_paths()
+    if not paths:
+        print("no markdown docs found", file=sys.stderr)
+        return 1
+    errors = []
+    for p in paths:
+        errors.extend(check_file(p))
+    for e in errors:
+        print(f"DOCS ERROR: {e}", file=sys.stderr)
+    if not errors:
+        rels = ", ".join(_display_path(p) for p in paths)
+        print(f"ok: {len(paths)} doc(s) clean ({rels})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
