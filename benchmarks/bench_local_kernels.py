@@ -117,6 +117,55 @@ def bench_merge(rows_out=None, n=512, layers=4, part_cap=1 << 14, out_cap=1 << 1
     return speed
 
 
+def bench_hash_vs_esc(rows_out=None, n=256, nnz_per_row=16):
+    """Local multiply: ESC expansion vs hash accumulator on a dense-ish
+    (high compression factor) workload — the regime where the table's
+    O(nnz(C)·load-factor) scratch beats the O(flops) expansion."""
+    a = gen.erdos_renyi(n, nnz_per_row, seed=5)
+    b = gen.erdos_renyi(n, nnz_per_row, seed=6)
+    flops = int(np.asarray(a.col_counts(), np.int64)
+                @ np.asarray(b.row_counts(), np.int64))
+    flops_cap = sym.rup8(flops)
+    out_cap = 1 << 16
+    c_probe, ovf = jax.jit(
+        lambda x, y: lsp.spgemm_esc(x, y, out_cap, flops_cap)
+    )(a, b)
+    nnz_out = int(c_probe.nnz)
+    assert int(ovf) == 0, int(ovf)
+    cf = flops / max(nnz_out, 1)
+    table_cap = sym.rup_pow2(max(int(nnz_out * sym.HASH_LOAD_FACTOR), 64))
+    chunk_cap = 4096
+    num_chunks = -(-flops_cap // chunk_cap)
+
+    t_esc = time_jit(
+        jax.jit(lambda x, y: lsp.spgemm_esc(x, y, out_cap, flops_cap)[0].vals),
+        a, b,
+    )
+    t_hash = time_jit(
+        jax.jit(lambda x, y: lsp.spgemm_hash(
+            x, y, out_cap, table_cap, chunk_cap, num_chunks)[0].vals),
+        a, b,
+    )
+    # resident scratch: the expansion's 3 arrays vs the table's 2
+    scratch_esc = flops_cap * 12
+    scratch_hash = table_cap * sym.HASH_SLOT_BYTES
+    _note(rows_out, **dict(
+        op="local_multiply", variant="esc", wall_ms=t_esc / 1e3,
+        gflops=2 * flops / t_esc / 1e3, flops=flops, nnz_out=nnz_out,
+        compression_factor=cf, scratch_bytes=scratch_esc,
+    ))
+    _note(rows_out, **dict(
+        op="local_multiply", variant="hash", wall_ms=t_hash / 1e3,
+        gflops=2 * flops / t_hash / 1e3, flops=flops, nnz_out=nnz_out,
+        compression_factor=cf, scratch_bytes=scratch_hash,
+        table_cap=table_cap,
+    ))
+    emit("tableVII/local_multiply_esc", t_esc, f"cf={cf:.2f}")
+    emit("tableVII/local_multiply_hash", t_hash,
+         f"cf={cf:.2f} scratch {scratch_hash}/{scratch_esc}B")
+    return scratch_esc / max(scratch_hash, 1)
+
+
 def bench_binned_pairing(rows_out=None, scale=7, edge_factor=8):
     """Paired SpGEMM: unbinned O(capA×capB) vs the k-binned plan on a
     skewed-k (R-MAT) workload — the regime binning targets."""
@@ -194,6 +243,7 @@ def run(n: int = 256, nnz_per_row: int = 8, layers: int = 4) -> None:
     bench_coalesce()
     bench_merge()
     bench_binned_pairing()
+    bench_hash_vs_esc()
 
 
 def run_local_suite() -> list:
@@ -203,9 +253,11 @@ def run_local_suite() -> list:
     coal = bench_coalesce(rows)
     merg = bench_merge(rows)
     red = bench_binned_pairing(rows)
+    scratch = bench_hash_vs_esc(rows)
     rows.append(dict(
         op="summary", variant="acceptance",
         wall_ms=0.0, gflops=0.0,
         coalesce_speedup=coal, merge_speedup=merg, pairing_reduction=red,
+        hash_scratch_reduction=scratch,
     ))
     return rows

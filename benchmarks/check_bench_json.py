@@ -25,6 +25,28 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 TOP_KEYS = ("suite", "backend", "platform", "rows")
 ROW_KEYS = ("op", "variant", "wall_ms")
 
+# Per-suite required (op, variant) -> extra row keys. Suites grow rows over
+# time; the pairs here are the acceptance artifacts later PRs assert against,
+# so dropping one is a schema error, not a silent regression.
+SUITE_ROWS = {
+    "summa3d_driver": {
+        ("plan", "fixed_mem_batches"): (
+            "num_batches_esc", "num_batches_hash", "per_process_memory",
+            "compression_factor",
+        ),
+        ("driver_e2e", "pipelined_hash"): (),
+        ("summary", "acceptance"): (
+            "num_batches_esc", "num_batches_hash", "hash_batches_fewer",
+            "local_path_used",
+        ),
+    },
+    "local_kernels": {
+        ("local_multiply", "esc"): ("compression_factor", "scratch_bytes"),
+        ("local_multiply", "hash"): ("compression_factor", "scratch_bytes"),
+        ("summary", "acceptance"): ("hash_scratch_reduction",),
+    },
+}
+
 
 def check_payload(payload: object, name: str = "<payload>") -> list:
     """Schema errors for one parsed artifact (empty list = valid)."""
@@ -50,6 +72,20 @@ def check_payload(payload: object, name: str = "<payload>") -> list:
             errors.append(f"{name}: rows[{i}].wall_ms not a number: {wall!r}")
         elif isinstance(wall, (int, float)) and wall < 0:
             errors.append(f"{name}: rows[{i}].wall_ms negative: {wall!r}")
+    by_key = {
+        (row.get("op"), row.get("variant")): row
+        for row in rows if isinstance(row, dict)
+    }
+    for (op, variant), extras in SUITE_ROWS.get(payload.get("suite"), {}).items():
+        row = by_key.get((op, variant))
+        if row is None:
+            errors.append(f"{name}: missing required row op={op!r} variant={variant!r}")
+            continue
+        for key in extras:
+            if key not in row:
+                errors.append(
+                    f"{name}: row op={op!r} variant={variant!r} missing '{key}'"
+                )
     return errors
 
 

@@ -13,9 +13,11 @@ table/figure module. ``--suite local`` runs the local-kernel hot-path suite
 ``BENCH_local_kernels.json`` at the repo root — op, variant, wall-ms, achieved
 GFLOP/s per row — so the perf trajectory is tracked from PR to PR.
 ``--suite summa3d`` runs the end-to-end batched driver suite (pipelined vs
-serial schedule, binned vs ESC local multiply) and writes
-``BENCH_summa3d.json``, refreshing ``BENCH_local_kernels.json`` in the same
-run so both perf files stay in lockstep. ``--suite mcl`` runs the
+serial schedule, binned vs ESC vs hash-accumulator local multiply, plus the
+fixed-memory hash-vs-ESC batch-count row) and writes ``BENCH_summa3d.json``,
+refreshing ``BENCH_local_kernels.json`` in the same run so both perf files
+stay in lockstep; ``--smoke`` shrinks it to CI-sized shapes with the same
+row schema. ``--suite mcl`` runs the
 device-resident vs host-loop MCL comparison (per-iteration wall-ms and
 host-transfer bytes) and writes ``BENCH_mcl.json``. ``--suite graph`` runs
 the §V-B masked-SpGEMM workloads (masked vs unmasked triangle counting on
@@ -80,9 +82,20 @@ def run_local(json_path: pathlib.Path) -> None:
     _write_suite("local_kernels", bench_local_kernels.run_local_suite, json_path)
 
 
-def run_summa3d(json_path: pathlib.Path) -> None:
+def run_summa3d(json_path: pathlib.Path, smoke: bool = False) -> None:
     from . import bench_summa3d
 
+    if smoke:
+        # CI-sized shapes: same rows/schema (check_bench_json validates the
+        # full summa3d row set), minutes -> seconds
+        _write_suite(
+            "summa3d_driver",
+            lambda: bench_summa3d.run_summa3d_suite(
+                scale=6, edge_factor=6, nb=4, iters=1
+            ),
+            json_path,
+        )
+        return
     _write_suite("summa3d_driver", bench_summa3d.run_summa3d_suite, json_path)
     # keep the local-kernel numbers in lockstep with the driver numbers
     run_local(REPO_ROOT / "BENCH_local_kernels.json")
@@ -111,6 +124,10 @@ def main() -> None:
         default=None,
         help="output path for the single-suite modes",
     )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized shapes (summa3d suite only): same rows, tiny scale",
+    )
     args = ap.parse_args()
     if args.suite == "local":
         run_local(pathlib.Path(
@@ -119,7 +136,7 @@ def main() -> None:
     elif args.suite == "summa3d":
         run_summa3d(pathlib.Path(
             args.json_out or REPO_ROOT / "BENCH_summa3d.json"
-        ))
+        ), smoke=args.smoke)
     elif args.suite == "mcl":
         run_mcl(pathlib.Path(args.json_out or REPO_ROOT / "BENCH_mcl.json"))
     elif args.suite == "graph":

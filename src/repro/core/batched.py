@@ -62,34 +62,47 @@ from .grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from .summa3d import (
     BatchCaps,
     BinnedCaps,
+    HashCaps,
     _squeeze_tile,
     summa3d_dense_step,
     summa3d_fused_step,
     summa3d_sparse_step,
 )
 from .symbolic import (
+    HASH_LOAD_FACTOR,
     KBinPlan,
     batch_count,
     batch_count_lower_bound,
     batching_plan_columns,
+    estimate_mem_c_bytes,
     fold_block_cyclic,
     plan_k_bins,
     rup8 as _rup8,
     rup_pow2 as _rup_pow2,
 )
 
+# auto-dispatch threshold: the hash path pays a per-chunk insert pass, so it
+# must buy at least this compression factor (flops per merged survivor)
+# before the plan prefers it over ESC/binned.
+HASH_CF_THRESHOLD = 2.0
+
+# partial products enumerated per reused chunk buffer of the hash path
+HASH_CHUNK_CAP = 4096
+
 # cached compiles: one per (grid, caps, semiring, tile-shape) combination —
 # the batch index is a traced scalar so all batches share one executable.
 _dense_jit = jax.jit(summa3d_dense_step, static_argnames=("grid", "semiring"))
 _sparse_jit = jax.jit(
     summa3d_sparse_step,
-    static_argnames=("grid", "caps", "semiring", "sorted_merge", "kbin"),
+    static_argnames=(
+        "grid", "caps", "semiring", "sorted_merge", "kbin", "hashc",
+    ),
 )
 _fused_jit = jax.jit(
     summa3d_fused_step,
     static_argnames=(
         "grid", "num_batches", "sel_cap", "caps", "semiring", "sorted_merge",
-        "path", "kbin", "mask_cap", "mask_complement",
+        "path", "kbin", "hashc", "mask_cap", "mask_complement",
     ),
 )
 
@@ -120,14 +133,21 @@ class SymbolicCounts:
 
 
 @partial(jax.jit, static_argnames=("grid",))
-def _symbolic3d_jit(a: DistSparse, b: DistSparse, grid: Grid):
+def _symbolic3d_jit(
+    a: DistSparse, b: DistSparse, mask: Optional[DistSparse], grid: Grid
+):
     """One jitted executable per (grid, operand-structure) — the shard_map is
     built inside the traced function, so re-running the planner hits the jit
-    cache instead of rebuilding (and re-lowering) the SPMD program."""
+    cache instead of rebuilding (and re-lowering) the SPMD program.
+
+    ``mask`` (masked plans) rides the same pass: its exact per-(tile, local
+    column) entry counts are computed on-grid and returned as one more count
+    vector, so masked planning never round-trips the mask's structure
+    through the host (ROADMAP carry-over (d))."""
     _, tn_b = b.tile_shape
     _, wl_a = a.tile_shape
 
-    def step(a_t: DistSparse, b_t: DistSparse):
+    def step(a_t: DistSparse, b_t: DistSparse, *rest):
         a_loc = _squeeze_tile(a_t)
         b_loc = _squeeze_tile(b_t)
         # A col counts restricted to OUR row block, over the per-layer
@@ -161,30 +181,42 @@ def _symbolic3d_jit(a: DistSparse, b: DistSparse, grid: Grid):
         bcc = b_loc.col_counts()  # (tn_b,)
         rc_local = b_loc.row_counts()  # (wl,)
         rc_full = lax.all_gather(rc_local, ROW_AX).reshape(-1)  # (k_tot,)
-        return (
+        outs = (
             percol[None, None, None],
             bcc[None, None, None],
             cc_full[None, None, None],
             rc_full[None, None, None],
         )
+        if rest:
+            # exact per-(tile, local column) mask counts, on-grid
+            mcc = _squeeze_tile(rest[0]).col_counts()  # (wl,)
+            outs = outs + (mcc[None, None, None],)
+        return outs
 
     spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
-    in_specs = tuple(dist_spec(d, spec3) for d in (a, b))
+    in_specs = [dist_spec(d, spec3) for d in (a, b)]
+    out_specs = (spec3, spec3, spec3, spec3)
+    args = [a, b]
+    if mask is not None:
+        in_specs.append(dist_spec(mask, spec3))
+        out_specs = out_specs + (spec3,)
+        args.append(mask)
     fn = shard_map(
-        step, mesh=grid.mesh, in_specs=in_specs,
-        out_specs=(spec3, spec3, spec3, spec3),
+        step, mesh=grid.mesh, in_specs=tuple(in_specs),
+        out_specs=out_specs,
         check_vma=False,
     )
-    return fn(a, b)
+    return fn(*args)
 
 
 def _mask_tile_colcounts(mask: DistSparse) -> np.ndarray:
     """Exact per-(tile, local column) mask entry counts — (pr, pc, l, wl).
 
-    Host-side count math on the planner path (the same altitude as the rest
-    of ``plan_batches``): like the symbolic pass itself, only counts are
-    derived — mask values never matter, and the result is exact, so the
-    mask-selection capacity it sizes cannot overflow.
+    Host numpy ORACLE of the on-grid mask counts ``_symbolic3d_jit`` now
+    emits (the planner path no longer round-trips the mask's cols/nnz
+    arrays); kept for parity testing — mask values never matter, and the
+    result is exact, so the mask-selection capacity it sizes cannot
+    overflow.
     """
     C = np.asarray(mask.cols)
     N = np.asarray(mask.nnz)
@@ -203,14 +235,18 @@ def symbolic3d_counts(
     """Run the distributed symbolic step; see ``SymbolicCounts``.
 
     ``mask`` (C-layout, same global shape as the product) additionally emits
-    the masked output counts the §V-B applications plan with.
+    the masked output counts the §V-B applications plan with — computed
+    inside the same jitted shard_map pass, so only the (pr, pc, l, wl)
+    count vectors ever reach the host.
     """
-    percol, bcc, cc_full, rc_full = _symbolic3d_jit(a, b, grid)
     mask_cc = None
     if mask is not None:
         assert mask.kind in ("A", "C"), mask.kind
         assert mask.shape == (a.shape[0], b.shape[1]), (mask.shape, a.shape, b.shape)
-        mask_cc = _mask_tile_colcounts(mask)
+        percol, bcc, cc_full, rc_full, mcc = _symbolic3d_jit(a, b, mask, grid)
+        mask_cc = np.asarray(mcc).astype(np.int64)
+    else:
+        percol, bcc, cc_full, rc_full = _symbolic3d_jit(a, b, None, grid)
     # cc_full is a function of (row block, layer) only; rc_full of
     # (col block, layer) only — slice the redundant grid axes away.
     return SymbolicCounts(
@@ -250,6 +286,9 @@ class BatchPlan:
     sel_cap: int = 0  # exact per-batch selection capacity (B entries)
     kbin: Optional[KBinPlan] = None  # k-bin plan for the paired local multiply
     mask_sel_cap: int = 0  # exact per-batch mask-slice capacity (masked only)
+    local_path: str = "esc"  # plan-driven local-multiply decision (b=1 view)
+    hash_caps: Optional[HashCaps] = None  # static hash caps (local_path="hash")
+    compression_est: float = 1.0  # flops per merged survivor (b=1, max proc)
 
     @property
     def binned_profitable(self) -> bool:
@@ -282,8 +321,21 @@ def plan_batches(
     sel_cap_floor: int = 0,
     num_batches_floor: int = 0,
     kbin_candidates: Optional[Tuple[int, ...]] = None,
+    local_path: str = "esc",
+    hash_caps_floor: Optional[HashCaps] = None,
 ) -> BatchPlan:
     """Run the symbolic step and derive b + static capacities (host math).
+
+    ``local_path`` drives the 3-way local-multiply decision recorded on the
+    plan: "esc" and "binned" keep the classic O(flops)-scratch budget;
+    "hash" budgets the hash-accumulator path at O(nnz_out·load_factor)
+    resident bytes instead of O(flops) — high compression-factor multiplies
+    then need strictly fewer batches at the same ``per_process_memory``;
+    "auto" picks "hash" when the estimated compression factor clears
+    ``HASH_CF_THRESHOLD`` (the binned-vs-ESC refinement stays with the
+    driver, which knows the semiring). ``hash_caps_floor`` floors the
+    derived ``HashCaps`` elementwise (iterated-multiply jit-cache
+    stability, like ``caps_floor``).
 
     ``reserved_bytes`` is subtracted from the per-process budget before the
     Alg. 3 batch count: memory the caller has already committed per process
@@ -348,15 +400,35 @@ def plan_batches(
     max_nnz_a = int(np.asarray(a.nnz).max())
     max_nnz_b = int(np.asarray(b.nnz).max())
 
+    # hash-path resident bound (O(output)): the table holds MERGED
+    # survivors, and a D-tile column cannot exceed tm_a distinct rows
+    assert local_path in ("auto", "esc", "binned", "hash"), local_path
+    tm_a = a.tile_shape[0]
+    max_hash_nnz = int(np.minimum(merged_d_percol, tm_a).sum(axis=-1).max())
+    compression_est = max_unmerged / max(max_hash_nnz, 1)
+    budget_hash = local_path == "hash" or (
+        local_path == "auto" and compression_est >= HASH_CF_THRESHOLD
+    )
+
     if force_num_batches is not None:
         nb = force_num_batches
     else:
+        if budget_hash:
+            # the stored intermediate is the table, not the expansion:
+            # convert its byte footprint back to r-byte units for Alg. 3
+            hash_bytes = estimate_mem_c_bytes(
+                max_unmerged, compression_est, r_bytes,
+                local_path="hash", load_factor=HASH_LOAD_FACTOR,
+            )
+            budget_nnz = max(-(-hash_bytes // r_bytes), 1)
+        else:
+            budget_nnz = max_unmerged
         # num_batches is part of the fused step's static signature; the
         # floor (a previous iteration's count — more batches is always
         # valid) keeps iterated multiplies on one executable as nnz drifts.
         nb = max(
             batch_count(
-                max_unmerged, max_nnz_a, max_nnz_b, per_process_memory,
+                budget_nnz, max_nnz_a, max_nnz_b, per_process_memory,
                 r=r_bytes,
             ),
             num_batches_floor,
@@ -378,7 +450,6 @@ def plan_batches(
         merged_col = np.minimum(merged_col, mcount)
     merged_piece = fold_block_cyclic(merged_col, nb, l).max()
 
-    tm_a = a.tile_shape[0]
     wb = tn_b // nb
     flops_cap = _rup8(max(int(max_batch_flops * slack), 64))
     d_cap = _rup8(
@@ -447,6 +518,39 @@ def plan_batches(
     except MemoryError:
         lb = -1
 
+    # plan-driven local-multiply decision + static hash caps. Both derive
+    # from the already-quantized/floored capacities, so iterated runs with
+    # pow2 caps keep ONE fused-step executable per decided path.
+    if budget_hash:
+        decided = "hash"
+    elif local_path in ("esc", "binned"):
+        decided = local_path
+    else:  # auto, hash not profitable: structural binned-vs-ESC preference
+        decided = (
+            "binned"
+            if kbin.num_bins > 1 and kbin.pairings < kbin.pairings_unbinned
+            else "esc"
+        )
+    hash_caps = None
+    if decided == "hash":
+        chunk = min(caps.flops_cap, _rup8(HASH_CHUNK_CAP))
+        num_chunks = -(-caps.flops_cap // chunk)
+        table = _rup_pow2(max(int(HASH_LOAD_FACTOR * caps.d_cap), 64))
+        hash_caps = HashCaps(
+            table_cap=table, chunk_cap=chunk, num_chunks=num_chunks
+        )
+        if hash_caps_floor is not None:
+            hash_caps = HashCaps(
+                table_cap=max(hash_caps.table_cap, hash_caps_floor.table_cap),
+                chunk_cap=max(hash_caps.chunk_cap, hash_caps_floor.chunk_cap),
+                num_chunks=max(
+                    hash_caps.num_chunks, hash_caps_floor.num_chunks
+                ),
+                max_probes=max(
+                    hash_caps.max_probes, hash_caps_floor.max_probes
+                ),
+            )
+
     per_batch_flops = per_batch_proc.sum(axis=(0, 1, 2))  # (nb,)
     return BatchPlan(
         num_batches=nb,
@@ -458,6 +562,9 @@ def plan_batches(
         sel_cap=sel_cap,
         kbin=kbin,
         mask_sel_cap=mask_sel_cap,
+        local_path=decided,
+        hash_caps=hash_caps,
+        compression_est=float(compression_est),
     )
 
 
@@ -517,6 +624,8 @@ class BatchedResult:
     consumed: list  # consumer outputs per batch
     binned: bool = False  # did the sparse local multiply run k-binned?
     binned_caps: Optional[BinnedCaps] = None  # the static BinnedCaps used
+    local_path: str = "esc"  # local multiply actually executed
+    hash_caps: Optional[HashCaps] = None  # the static HashCaps used (hash)
 
 
 def batched_summa3d(
@@ -545,6 +654,8 @@ def batched_summa3d(
     num_batches_floor: int = 0,
     kbin_candidates: Optional[Tuple[int, ...]] = None,
     kbin_caps_floor: Optional[BinnedCaps] = None,
+    local_path: str = "auto",
+    hash_caps_floor: Optional[HashCaps] = None,
 ) -> BatchedResult:
     """Multiply A·B in batches; the consumer sees each batch then it's freed.
 
@@ -586,18 +697,44 @@ def batched_summa3d(
     kernel: "auto" uses it when the symbolic bin plan strictly reduces
     pairing work (and the semiring is plus_times); True forces it; False
     pins ESC. Consumers are always invoked in batch order.
+
+    ``local_path`` is the plan-driven 3-way dispatch over ESC / k-binned /
+    hash-accumulator local multiplies: "auto" (default) lets the plan pick —
+    hash when the compression factor clears ``HASH_CF_THRESHOLD`` (any
+    semiring; the plan then budgets O(nnz_out·load_factor) resident bytes,
+    so high-cf multiplies batch less), else the existing binned-vs-ESC
+    choice; "hash"/"binned"/"esc" force a path. An explicit ``binned``
+    override (True/False) pins the classic two-way dispatch — back-compat
+    for callers that predate the hash path. One ``local_path`` decision is
+    made per plan (not per batch) so iterated runs keep ONE executable per
+    path; ``hash_caps_floor`` keeps its static caps monotone across
+    iterations.
     """
+    assert local_path in ("auto", "esc", "binned", "hash"), local_path
+    # the plan only budgets the hash path when the driver could dispatch it:
+    # an explicit binned override pins the classic O(flops) budget.
+    plan_local_path = local_path
+    if local_path == "auto" and (binned != "auto" or path != "sparse"):
+        plan_local_path = "esc"
     plan = plan_batches(
         a, b, grid, per_process_memory, r_bytes=r_bytes, slack=slack,
         force_num_batches=force_num_batches, reserved_bytes=reserved_bytes,
         mask=mask, mask_complement=mask_complement,
         caps_pow2=caps_pow2, caps_floor=caps_floor, sel_cap_floor=sel_cap_floor,
         num_batches_floor=num_batches_floor, kbin_candidates=kbin_candidates,
+        local_path=plan_local_path, hash_caps_floor=hash_caps_floor,
     )
     nb = plan.num_batches
     n_cols = b.shape[1]
 
-    if binned == "auto":
+    use_hash = path == "sparse" and plan.local_path == "hash"
+    if use_hash:
+        use_binned = False
+    elif local_path == "binned":
+        use_binned = path == "sparse"
+    elif local_path == "esc":
+        use_binned = False
+    elif binned == "auto":
         use_binned = (
             path == "sparse"
             and semiring.name == "plus_times"
@@ -628,16 +765,21 @@ def batched_summa3d(
             max(kb.bin_cap_b, kbin_caps_floor.bin_cap_b),
         )
     bin_of_k = jnp.asarray(plan.kbin.bin_of_k) if use_binned else None
+    hc = plan.hash_caps if use_hash else None
+    if use_hash:
+        assert hc is not None, "hash dispatch requires planned HashCaps"
 
     caps, sel_cap, mask_cap = plan.caps, plan.sel_cap, plan.mask_sel_cap
     retries = 0
 
-    def dispatch(bi: int, caps_: BatchCaps, sel_cap_: int, kb_, mask_cap_: int):
+    def dispatch(
+        bi: int, caps_: BatchCaps, sel_cap_: int, kb_, hc_, mask_cap_: int
+    ):
         """Async-dispatch one fused batch step; nothing blocks here."""
         return _fused_jit(
             a, b, jnp.int32(bi), bin_of_k, mask, grid=grid, num_batches=nb,
             sel_cap=sel_cap_, caps=caps_, semiring=semiring,
-            sorted_merge=sorted_merge, path=path, kbin=kb_,
+            sorted_merge=sorted_merge, path=path, kbin=kb_, hashc=hc_,
             mask_cap=mask_cap_, mask_complement=mask_complement,
         )
 
@@ -647,9 +789,13 @@ def batched_summa3d(
     # iteration. Dispatch defaults stay at the planned values within this
     # run: the pipelined and serial schedules must remain batch-identical
     # (each batch's retry ladder grows from the same base).
-    used = {"caps": caps, "sel": sel_cap, "kb": kb, "mask": mask_cap}
+    used = {"caps": caps, "sel": sel_cap, "kb": kb, "hashc": hc,
+            "mask": mask_cap}
 
-    def grow(o: np.ndarray, caps_: BatchCaps, sel_cap_: int, kb_, mask_cap_: int):
+    def grow(
+        o: np.ndarray, caps_: BatchCaps, sel_cap_: int, kb_, hc_,
+        mask_cap_: int,
+    ):
         """Next capacity plan after an overflow: selection first (a truncated
         selection makes the multiply flags unreliable), multiply second.
         The mask-slice capacity is exact, but it is doubled alongside the
@@ -659,6 +805,7 @@ def batched_summa3d(
         elif o[1] > 0:
             caps_ = caps_.doubled()
             kb_ = kb_.doubled() if kb_ is not None else None
+            hc_ = hc_.doubled() if hc_ is not None else None
             if mask is not None:
                 mask_cap_ = min(mask_cap_ * 2, mask.cap)
         used["sel"] = max(used["sel"], sel_cap_)
@@ -674,18 +821,29 @@ def batched_summa3d(
                 max(used["kb"].bin_cap_a, kb_.bin_cap_a),
                 max(used["kb"].bin_cap_b, kb_.bin_cap_b),
             )
-        return caps_, sel_cap_, kb_, mask_cap_
+        if hc_ is not None:
+            used["hashc"] = HashCaps(
+                table_cap=max(used["hashc"].table_cap, hc_.table_cap),
+                chunk_cap=max(used["hashc"].chunk_cap, hc_.chunk_cap),
+                num_chunks=max(used["hashc"].num_chunks, hc_.num_chunks),
+                max_probes=max(used["hashc"].max_probes, hc_.max_probes),
+            )
+        return caps_, sel_cap_, kb_, hc_, mask_cap_
 
-    def run_batch_sync(bi: int, caps_: BatchCaps, sel_cap_: int, kb_, mask_cap_: int):
+    def run_batch_sync(
+        bi: int, caps_: BatchCaps, sel_cap_: int, kb_, hc_, mask_cap_: int
+    ):
         """The kept, tested synchronous retry loop (§IV-A robustness)."""
         nonlocal retries
         for _ in range(max_retries + 1):
-            c_batch, ovf = dispatch(bi, caps_, sel_cap_, kb_, mask_cap_)
+            c_batch, ovf = dispatch(bi, caps_, sel_cap_, kb_, hc_, mask_cap_)
             o = np.asarray(ovf)
             if not o.any():
                 return c_batch
             retries += 1
-            caps_, sel_cap_, kb_, mask_cap_ = grow(o, caps_, sel_cap_, kb_, mask_cap_)
+            caps_, sel_cap_, kb_, hc_, mask_cap_ = grow(
+                o, caps_, sel_cap_, kb_, hc_, mask_cap_
+            )
         raise RuntimeError(
             f"batch {bi}: capacity overflow persisted after {max_retries} retries"
         )
@@ -705,20 +863,23 @@ def batched_summa3d(
             # the speculatively postprocessed batch was built from a garbage
             # product — recompute synchronously and re-run the hook on it
             c_post = post(
-                bi, run_batch_sync(bi, *grow(o, caps, sel_cap, kb, mask_cap))
+                bi,
+                run_batch_sync(bi, *grow(o, caps, sel_cap, kb, hc, mask_cap)),
             )
         col_map = batch_column_map(n_cols, grid, nb, bi)
         consumed.append(consumer(bi, c_post, col_map))
 
     if not pipelined:
         for bi in range(nb):
-            c_batch = post(bi, run_batch_sync(bi, caps, sel_cap, kb, mask_cap))
+            c_batch = post(
+                bi, run_batch_sync(bi, caps, sel_cap, kb, hc, mask_cap)
+            )
             col_map = batch_column_map(n_cols, grid, nb, bi)
             consumed.append(consumer(bi, c_batch, col_map))
     else:
         inflight = deque()
         for bi in range(nb):
-            c_batch, ovf = dispatch(bi, caps, sel_cap, kb, mask_cap)
+            c_batch, ovf = dispatch(bi, caps, sel_cap, kb, hc, mask_cap)
             inflight.append((bi, post(bi, c_batch), ovf))
             if len(inflight) > lookahead:
                 finish(*inflight.popleft())
@@ -727,9 +888,11 @@ def batched_summa3d(
     # report the capacities actually used (incl. any retry growth) so
     # iterated callers floor their next plan on reality, not the estimate
     plan = dataclasses.replace(
-        plan, caps=used["caps"], sel_cap=used["sel"], mask_sel_cap=used["mask"]
+        plan, caps=used["caps"], sel_cap=used["sel"],
+        mask_sel_cap=used["mask"], hash_caps=used["hashc"],
     )
+    executed = "hash" if use_hash else ("binned" if use_binned else "esc")
     return BatchedResult(
         plan=plan, num_retries=retries, consumed=consumed, binned=use_binned,
-        binned_caps=used["kb"],
+        binned_caps=used["kb"], local_path=executed, hash_caps=used["hashc"],
     )

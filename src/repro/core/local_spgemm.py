@@ -227,6 +227,116 @@ def _coalesce_semiring(
     return SparseCOO(rows, cols, vals, nnz, (m, n)), overflow
 
 
+def spgemm_hash(
+    a: SparseCOO,
+    b: SparseCOO,
+    out_cap: int,
+    table_cap: int,
+    chunk_cap: int,
+    num_chunks: int,
+    semiring: sr.Semiring = sr.PLUS_TIMES,
+    a_is_colsorted: bool = False,
+    mask_keys: Array = None,
+    mask_complement: bool = False,
+    max_probes: int = 32,
+    use_pallas: bool = None,
+    interpret: bool = None,
+) -> Tuple[SparseCOO, Array]:
+    """Sparse × sparse → sparse via a hash accumulator — O(output) scratch.
+
+    The paper's memory-constrained claim wants partial products consumed on
+    the fly, not materialized: unlike ``spgemm_esc`` (whole O(flops_cap)
+    expansion, then sort+compress), this path enumerates the expansion in
+    ``num_chunks`` reused chunks of ``chunk_cap`` partial products and inserts
+    each chunk into an open-addressing table of ``table_cap`` slots
+    (``kernels.spgemm_hash``), semiring-accumulating on probe hits. Resident
+    scratch is O(table_cap + chunk_cap) = O(nnz(C)·load_factor + const)
+    instead of O(flops) — the win the plan budgets when the compression
+    factor flops/nnz(C) is high.
+
+    Masked entries are rejected *at insert* (membership probe of the packed
+    key against ``mask_keys``, same strict/complement semantics as
+    ``spgemm_esc``), so the table only ever holds survivors.
+
+    Output contract matches ``spgemm_esc`` exactly: (row-major-sorted C,
+    overflow) where overflow counts dropped inserts (table full /
+    ``max_probes`` beaten), enumeration beyond ``num_chunks·chunk_cap``
+    flops, and ``out_cap`` violations — one device-resident flag the batched
+    driver's retry ladder handles unchanged.
+    """
+    from ..kernels import spgemm_hash as hashkern
+
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert table_cap >= 8 and table_cap & (table_cap - 1) == 0, table_cap
+    assert sortkeys.fits_i32(m, n), (m, n)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    a_csc = a if a_is_colsorted else a.sort_colmajor()
+    bt = b.transpose()  # entries (j, k): rows=j, cols=k
+    colcount = a_csc.col_counts()
+    colptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(colcount).astype(jnp.int32)]
+    )
+    ccount_pad = jnp.concatenate([colcount, jnp.zeros((1,), jnp.int32)])
+    colptr_pad = jnp.concatenate([colptr, jnp.zeros((1,), jnp.int32)])
+    bm = bt.valid_mask()
+    cnt = jnp.where(bm, ccount_pad[bt.cols], 0)  # products per B entry
+    cum = jnp.cumsum(cnt).astype(jnp.int32)  # inclusive prefix
+    total = cum[-1] if bt.cap > 0 else jnp.int32(0)
+
+    add_kind = semiring.add_kind
+    table_key0 = jnp.full((table_cap,), hashkern.EMPTY, jnp.int32)
+    table_val0 = jnp.full(
+        (table_cap,), hashkern.table_init_val(add_kind), a.vals.dtype
+    )
+
+    def chunk_body(c, carry):
+        tk, tv, dropped = carry
+        # enumerate expansion slots [c·chunk_cap, (c+1)·chunk_cap): the B
+        # entry of slot e is the first t with cum[t] > e (rank in the
+        # inclusive prefix — empty segments are skipped by construction)
+        e = c * chunk_cap + jnp.arange(chunk_cap, dtype=jnp.int32)
+        t = jnp.searchsorted(cum, e, side="right").astype(jnp.int32)
+        t = jnp.clip(t, 0, bt.cap - 1)
+        within = e - (cum[t] - cnt[t])
+        valid = e < total
+        bk = bt.cols[t]  # contraction index k
+        ai = jnp.clip(colptr_pad[bk] + within, 0, a_csc.cap - 1)
+        rows = a_csc.rows[ai]
+        cols = bt.rows[t]  # B entry (k, j) -> output col j
+        vals = semiring.mul(a_csc.vals[ai], bt.vals[t])
+        key = sortkeys.pack_rowmajor(rows, cols, n)
+        if mask_keys is not None:
+            hit = sortkeys.keys_in_sorted(key, mask_keys)
+            valid = valid & (~hit if mask_complement else hit)
+        tk, tv, drop = hashkern.hash_insert(
+            tk, tv, key, vals, valid, add_kind=add_kind,
+            max_probes=max_probes, use_pallas=use_pallas, interpret=interpret,
+        )
+        return tk, tv, dropped + drop
+
+    table_key, table_val, dropped = jax.lax.fori_loop(
+        0, num_chunks, chunk_body, (table_key0, table_val0, jnp.int32(0))
+    )
+    flop_overflow = jnp.maximum(total - num_chunks * chunk_cap, 0)
+
+    # table → sorted COO: EMPTY (INT32_MAX) sorts after every real key and
+    # the row-major sentinel, so one sort + sentinel compress finalizes
+    skey, svals = jax.lax.sort((table_key, table_val), num_keys=1)
+    sent = jnp.int32(sortkeys.key_space(m, n) - 1)
+    okey, ovals, nnz, ovf_out = sortkeys.compress_sorted_keys(
+        skey, svals, sent, out_cap, add_kind=add_kind
+    )
+    orows, ocols = sortkeys.unpack_rowmajor(okey, n)
+    c_out = SparseCOO(orows, ocols, ovals, nnz, (m, n))
+    return c_out, ovf_out + flop_overflow + dropped
+
+
 def spgemm_kbinned(
     a: SparseCOO,
     b: SparseCOO,

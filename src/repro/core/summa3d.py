@@ -63,6 +63,7 @@ from .local_spgemm import (
     mask_indicator,
     merge_sparse,
     spgemm_esc,
+    spgemm_hash,
     spgemm_kbinned,
     spmm,
 )
@@ -112,6 +113,34 @@ class BinnedCaps:
             num_bins=self.num_bins,
             bin_cap_a=self.bin_cap_a * 2,
             bin_cap_b=self.bin_cap_b * 2,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class HashCaps:
+    """Static parameters of the hash-accumulator local multiply (jit-static).
+
+    ``table_cap`` (power of two) sizes the open-addressing table — the
+    O(nnz_out·load_factor) resident scratch the plan budgets instead of
+    O(flops). ``chunk_cap`` partial products are enumerated per chunk into a
+    single reused buffer; ``num_chunks`` chunks cover the planned flops
+    bound. ``max_probes`` linear-probe rounds before an insert is dropped
+    and counted (overflow → driver retry).
+    """
+
+    table_cap: int
+    chunk_cap: int
+    num_chunks: int
+    max_probes: int = 32
+
+    def doubled(self) -> "HashCaps":
+        # chunk_cap is a bandwidth knob, not a soundness cap — growing the
+        # chunk *count* (and the table + probe bound) is what clears drops
+        return HashCaps(
+            table_cap=self.table_cap * 2,
+            chunk_cap=self.chunk_cap,
+            num_chunks=self.num_chunks * 2,
+            max_probes=min(self.max_probes * 2, 256),
         )
 
 
@@ -304,15 +333,18 @@ def _sparse_tile_body(
     semiring: sr.Semiring, sorted_merge: bool,
     kbin: "BinnedCaps" = None, bin_of_k: Array = None,
     mask: SparseCOO = None, mask_complement: bool = False,
+    hashc: "HashCaps" = None,
 ) -> Tuple[SparseCOO, Array]:
     """Per-device sparse pipeline (inside shard_map): gather → local multiply
     → partitioned ColSplit → AllToAll-Fiber → Merge-Fiber.
 
-    ``kbin`` selects the local multiply: None runs ESC (any semiring); a
-    ``BinnedCaps`` runs the k-binned paired kernel (plus_times only), pairing
-    O(Σ_g capA_g×capB_g) instead of O(capA×capB) — the plan-driven switch the
-    symbolic step emits. Both produce a row-major-sorted D tile, so the
-    downstream split/merge invariants are identical.
+    ``kbin``/``hashc`` select the local multiply: None/None runs ESC (any
+    semiring); a ``BinnedCaps`` runs the k-binned paired kernel (plus_times
+    only), pairing O(Σ_g capA_g×capB_g) instead of O(capA×capB); a
+    ``HashCaps`` runs the hash-accumulator multiply (any semiring),
+    O(table + chunk) scratch instead of O(flops) — the plan-driven 3-way
+    switch the symbolic step emits. All produce a row-major-sorted D tile,
+    so the downstream split/merge invariants are identical.
 
     ``mask`` (a SparseCOO over the D tile's (tm, tn_b) output space) runs the
     masked/filtered formulation: ESC intersects the expanded products'
@@ -322,6 +354,7 @@ def _sparse_tile_body(
     (ColSplit pieces, the fiber exchange, Merge-Fiber) carries survivors
     only, which is where the masked memory/traffic win lives.
     """
+    assert kbin is None or hashc is None, "kbin and hashc are exclusive"
     tm_a, _ = a_loc.shape
     _, tn_b = b_loc.shape
     piece_w = tn_b // l
@@ -333,11 +366,20 @@ def _sparse_tile_body(
             mkeys = sortkeys.sorted_mask_keys(
                 mask.rows, mask.cols, mask.valid_mask(), (tm_a, tn_b)
             )
-        d_tile, ovf_mul = spgemm_esc(
-            a_cat, b_cat, out_cap=caps.d_cap, flops_cap=caps.flops_cap,
-            semiring=semiring, mask_keys=mkeys,
-            mask_complement=mask_complement,
-        )  # (tm, tn_b) sparse, row-major sorted
+        if hashc is not None:
+            d_tile, ovf_mul = spgemm_hash(
+                a_cat, b_cat, out_cap=caps.d_cap,
+                table_cap=hashc.table_cap, chunk_cap=hashc.chunk_cap,
+                num_chunks=hashc.num_chunks, semiring=semiring,
+                mask_keys=mkeys, mask_complement=mask_complement,
+                max_probes=hashc.max_probes,
+            )  # (tm, tn_b) sparse, row-major sorted
+        else:
+            d_tile, ovf_mul = spgemm_esc(
+                a_cat, b_cat, out_cap=caps.d_cap, flops_cap=caps.flops_cap,
+                semiring=semiring, mask_keys=mkeys,
+                mask_complement=mask_complement,
+            )  # (tm, tn_b) sparse, row-major sorted
     else:
         d_tile, ovf_mul = spgemm_kbinned(
             a_cat, b_cat, caps.d_cap, kbin.num_bins, kbin.bin_cap_a,
@@ -369,6 +411,7 @@ def summa3d_sparse_step(
     sorted_merge: bool = True,
     kbin: BinnedCaps = None,
     bin_of_k: Array = None,
+    hashc: HashCaps = None,
 ) -> Tuple[DistSparse, Array]:
     """One batched-SUMMA3D step, sparse path. Returns (C tiles, overflow).
 
@@ -393,7 +436,7 @@ def summa3d_sparse_step(
         bok = rest[0] if rest else None
         c_tile, ovf = _sparse_tile_body(
             _squeeze_tile(a_t), _squeeze_tile(b_t), l, caps, semiring,
-            sorted_merge, kbin=kbin, bin_of_k=bok,
+            sorted_merge, kbin=kbin, bin_of_k=bok, hashc=hashc,
         )
         return (
             c_tile.rows[None, None, None],
@@ -445,6 +488,7 @@ def summa3d_fused_step(
     sorted_merge: bool = True,
     path: str = "sparse",
     kbin: BinnedCaps = None,
+    hashc: HashCaps = None,
     mask_cap: int = 0,
     mask_complement: bool = False,
 ):
@@ -537,7 +581,7 @@ def summa3d_fused_step(
             return c_tile[None, None, None], jnp.stack([ovf_sel, ovf_mask])
         c_tile, ovf_mul = _sparse_tile_body(
             a_loc, sel, l, caps, semiring, sorted_merge,
-            kbin=kbin, bin_of_k=bok,
+            kbin=kbin, bin_of_k=bok, hashc=hashc,
             mask=mask_cat, mask_complement=mask_complement,
         )
         return (

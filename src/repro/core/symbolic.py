@@ -218,7 +218,32 @@ def rup_pow2(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length()
 
 
-def estimate_mem_c_bytes(flops: int, compression_factor: float, r: int) -> int:
-    """mem(C) = r * Σ_k nnz(D^k); bounded by r*flops (no merging, worst case)
-    and approximated by r*flops/cf_layer when layer-level merging is counted."""
-    return int(r * flops / max(compression_factor, 1.0))
+# Open-addressing slot of the hash-accumulator multiply: i32 key + f32 value.
+HASH_SLOT_BYTES = 8
+
+# Default table occupancy target (slots per merged output entry). 1/1.75 ≈
+# 0.57 occupancy keeps expected linear-probe chains short while the table
+# stays within ~2 slots of footprint per survivor.
+HASH_LOAD_FACTOR = 1.75
+
+
+def estimate_mem_c_bytes(
+    flops: int, compression_factor: float, r: int,
+    local_path: str = "esc", load_factor: float = None,
+) -> int:
+    """mem(C) of one multiply's resident intermediate.
+
+    ESC path: r * Σ_k nnz(D^k) — bounded by r*flops (no merging, worst case)
+    and approximated by r*flops/cf_layer when layer-level merging is counted.
+
+    Hash path (``local_path="hash"``): the resident structure is the
+    open-addressing table over the *merged* output, so the footprint is
+    slot_bytes · load_factor · (flops/cf) — the measured load factor scales
+    the table, not the COO entry size, which is why high-cf multiplies fit
+    where the ESC expansion doesn't.
+    """
+    nnz = flops / max(compression_factor, 1.0)
+    if local_path == "hash":
+        lf = HASH_LOAD_FACTOR if load_factor is None else load_factor
+        return int(math.ceil(nnz * lf * HASH_SLOT_BYTES))
+    return int(r * nnz)

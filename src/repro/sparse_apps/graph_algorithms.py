@@ -26,6 +26,7 @@ the device paths.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import List, Optional, Tuple
 
@@ -41,15 +42,19 @@ from ..core.distsparse import DistSparse, dist_spec, scatter_to_grid
 from ..core.grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from ..core.sparse import SparseCOO, from_numpy_coo
 from ..core.summa3d import _pmax_grid, _psum_grid, _squeeze_tile
+from ..core.symbolic import rup_pow2
 from . import mcl as _mcl
 from .mcl import _sparse_batch_to_global, _to_host
 
 
 def _charge_mask_planning_transfer(mask: DistSparse) -> None:
-    """Masked planning pulls the mask's column structure to host once
-    (``batched._mask_tile_colcounts``); charge those bytes against the
-    transfer accounting so the device-vs-host comparisons stay honest."""
-    _mcl._TRANSFER_BYTES[0] += mask.cols.nbytes + mask.nnz.nbytes
+    """Masked planning counts the mask's per-tile column structure ON the
+    grid (inside ``batched._symbolic3d_jit``); only the (pr, pc, l, w_l) i32
+    count array crosses to the host. Charge those bytes against the transfer
+    accounting so the device-vs-host comparisons stay honest."""
+    pr, pc, l = mask.grid_shape
+    wl = mask.tile_shape[1]
+    _mcl._TRANSFER_BYTES[0] += pr * pc * l * wl * 4
 
 
 def _strict_parts(a: SparseCOO) -> Tuple[SparseCOO, SparseCOO]:
@@ -107,12 +112,14 @@ def _overlap_filter(
         g_col = j * w + (k * num_batches + batch_) * wbl + t.cols
         keep = t.valid_mask() & (t.vals >= min_shared) & (g_row < g_col)
         kept, ovf = t.compact(keep, t.cap)
+        local = jnp.sum(keep.astype(jnp.int32))
         return (
             kept.rows[None, None, None],
             kept.cols[None, None, None],
             kept.vals[None, None, None],
             kept.nnz[None, None, None],
-            _psum_grid(jnp.sum(keep.astype(jnp.int32))),
+            _psum_grid(local),
+            _pmax_grid(local),
             _pmax_grid(ovf),
         )
 
@@ -120,12 +127,30 @@ def _overlap_filter(
     spec0 = jax.sharding.PartitionSpec()
     fn = shard_map(step, mesh=grid.mesh,
                    in_specs=(dist_spec(c, spec3), spec0),
-                   out_specs=(spec3,) * 4 + (spec0,) * 2, check_vma=False)
-    rows, cols, vals, nnz, cnt, ovf = fn(c, jnp.int32(batch))
+                   out_specs=(spec3,) * 4 + (spec0,) * 3, check_vma=False)
+    rows, cols, vals, nnz, cnt, maxc, ovf = fn(c, jnp.int32(batch))
     filtered = DistSparse(rows=rows, cols=cols, vals=vals, nnz=nnz,
                           shape=c.shape, tile_shape=c.tile_shape,
                           grid_shape=c.grid_shape, kind=c.kind)
-    return filtered, cnt, ovf
+    return filtered, cnt, maxc, ovf
+
+
+def _shrink_batch(d: DistSparse, max_tile_nnz: int) -> DistSparse:
+    """Slice a front-compacted batch down to its survivor capacity before the
+    device→host pull. ``compact`` front-packs every tile, so dropping the
+    tail beyond the max per-tile survivor count is lossless while the pull
+    shrinks from O(plan cap) to O(survivors). Pow2-quantized so repeated
+    batches reuse the same slice executables."""
+    cap = d.rows.shape[-1]
+    new_cap = min(cap, rup_pow2(max(int(max_tile_nnz), 8)))
+    if new_cap >= cap:
+        return d
+    return dataclasses.replace(
+        d,
+        rows=d.rows[..., :new_cap],
+        cols=d.cols[..., :new_cap],
+        vals=d.vals[..., :new_cap],
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -249,9 +274,12 @@ def overlap_pairs(
         )
 
     def consumer(bi, payload, col_map):
-        filtered, cnt, ovf = payload
+        filtered, cnt, maxc, ovf = payload
         assert int(_to_host(ovf)) == 0
-        rr, cc, vv = _sparse_batch_to_global(filtered, col_map)
+        # survivor-sized pull: slice the front-compacted batch to the max
+        # per-tile survivor count before any array crosses to the host
+        shrunk = _shrink_batch(filtered, int(_to_host(maxc)))
+        rr, cc, vv = _sparse_batch_to_global(shrunk, col_map)
         assert len(rr) == int(_to_host(cnt)), (len(rr), cnt)
         pieces.append((rr, cc, vv))
         return None

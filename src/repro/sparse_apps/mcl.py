@@ -80,6 +80,8 @@ class MCLConfig:
     lookahead: int = 2  # pipelined driver window
     r_bytes: int = 12  # bytes per stored nonzero (COO: i32+i32+f32)
     binned: object = "auto"  # sparse local multiply: "auto" | True | False
+    # 3-way local-multiply dispatch: "auto" | "esc" | "binned" | "hash"
+    local_path: str = "auto"
 
 
 # ---------------------------------------------------------------------------
@@ -399,6 +401,8 @@ def mcl_iterate(
     binned_arg = cfg.binned
     kbin_candidates = None
     kb_floor = None
+    lp_arg = cfg.local_path
+    hc_floor = None
     for it in range(cfg.max_iters):
         t0_bytes = transfer_bytes()
         t0 = time.perf_counter()
@@ -429,13 +433,17 @@ def mcl_iterate(
             caps_pow2=True, caps_floor=caps_floor, sel_cap_floor=sel_floor,
             num_batches_floor=nb_floor,
             kbin_candidates=kbin_candidates, kbin_caps_floor=kb_floor,
+            local_path=lp_arg, hash_caps_floor=hc_floor,
         )
         caps_floor, sel_floor = res.plan.caps, res.plan.sel_cap
         nb_floor = res.plan.num_batches
         binned_arg = res.binned  # pin the auto decision from iteration 1
+        lp_arg = res.local_path  # same for the 3-way local-path decision
         if res.binned_caps is not None:
             kbin_candidates = (res.binned_caps.num_bins,)
             kb_floor = res.binned_caps
+        if res.hash_caps is not None:
+            hc_floor = res.hash_caps
         A, B, ovf = reassemble_operands(tuple(batches), grid, cap_a, cap_b)
         # ONE host sync per iteration, scalars only (convergence check)
         chaos = max(float(_to_host(st["chaos"])) for st in stats)

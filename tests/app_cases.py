@@ -276,9 +276,11 @@ def case_triangle_masked_rmat():
         ga._host_mask_filter = real_filter
         ga._sparse_batch_to_global = real_to_global
     assert got == want == got_host, (got, want, got_host)
-    # device path: one scalar per batch + the one-time mask-structure pull
-    # the planner makes (counted); host oracle moves every full batch
-    mask_pull = M_d.cols.nbytes + M_d.nnz.nbytes
+    # device path: one scalar per batch + the one-time mask count-vector
+    # pull the planner makes (counts are computed on-grid now, so only the
+    # (pr, pc, l, w_l) i32 array crosses); host oracle moves every full batch
+    pr_, pc_, l_ = M_d.grid_shape
+    mask_pull = pr_ * pc_ * l_ * M_d.tile_shape[1] * 4
     assert device_bytes <= mask_pull + 64, (device_bytes, mask_pull)
     assert host_bytes > 10 * device_bytes, (host_bytes, device_bytes)
     print(f"OK triangle_masked_rmat (triangles={got}, "
@@ -393,8 +395,30 @@ def case_overlap_device_filter():
     )
     got_h = overlap_pairs(a, grid, min_shared=2, candidates=cands_half)
     assert got_h == half, (len(got_h), len(half))
+
+    # survivor-sized transfer: the device→host pull is sliced down to the
+    # max per-tile survivor count before any array moves. With an impossible
+    # threshold every batch shrinks to the floor capacity of 8.
+    seen_caps = []
+    real_to_global2 = ga._sparse_batch_to_global
+
+    def spying_to_global(c, col_map):
+        seen_caps.append(int(c.rows.shape[-1]))
+        return real_to_global2(c, col_map)
+
+    ga._sparse_batch_to_global = spying_to_global
+    try:
+        none = overlap_pairs(a, grid, min_shared=10 ** 6)
+        exact_again = overlap_pairs(a, grid, min_shared=2)
+    finally:
+        ga._sparse_batch_to_global = real_to_global2
+    assert none == []
+    assert exact_again == want, (len(exact_again), len(want))
+    nb_seen = len(seen_caps)
+    assert seen_caps and min(seen_caps) == 8, seen_caps
     print(f"OK overlap_device_filter (pairs={len(got)}, "
-          f"candidates {len(got_c)}/{len(got_h)})")
+          f"candidates {len(got_c)}/{len(got_h)}, "
+          f"shrunk caps {seen_caps[:nb_seen]})")
 
 
 CASES = {n[len("case_"):]: f for n, f in list(globals().items())

@@ -39,15 +39,22 @@ def test_summa3d_suite_rows(tmp_path):
     for row in rows:
         by_op.setdefault(row["op"], []).append(row)
 
-    (plan,) = by_op["plan"]
-    assert plan["pairings_binned"] < plan["pairings_unbinned"], plan
+    plans = {row["variant"]: row for row in by_op["plan"]}
+    assert set(plans) == {"kbin", "fixed_mem_batches"}
+    assert plans["kbin"]["pairings_binned"] < plans["kbin"]["pairings_unbinned"]
+    # the hash memory model's acceptance row: fewer batches at fixed memory
+    fixed = plans["fixed_mem_batches"]
+    assert fixed["num_batches_esc"] > 1, fixed
+    assert fixed["num_batches_hash"] < fixed["num_batches_esc"], fixed
 
     e2e = {row["variant"]: row["wall_ms"] for row in by_op["driver_e2e"]}
     assert set(e2e) == {"serial", "pipelined", "pipelined_esc",
-                        "pipelined_binned"}
+                        "pipelined_binned", "pipelined_hash"}
     assert all(ms > 0 for ms in e2e.values()), e2e
     assert len(by_op["driver_batch"]) == 4  # one wall-ms row per batch
 
     (summary,) = by_op["summary"]
     assert summary["speedup_pipelined_vs_serial"] > 0
     assert summary["pairing_reduction"] > 1.0
+    assert summary["hash_batches_fewer"] is True, summary
+    assert summary["local_path_used"] in ("esc", "binned", "hash")
