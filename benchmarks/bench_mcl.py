@@ -119,6 +119,41 @@ def run_mcl_suite(n: int = 64, max_iters: int = 6) -> list:
             iter_bytes["host"] / max(iter_bytes["device"], 1.0)
         ),
     ))
+    rows.extend(_checkpoint_overhead_rows(
+        a, grid, max_iters, tight, nb, e2e["device"]))
+    return rows
+
+
+def _checkpoint_overhead_rows(a, grid, max_iters, tight, nb, base_ms):
+    """Per-iteration checkpoint overhead of the resilient loop: the same
+    device run under ``mcl_iterate_resilient`` with a checkpoint every
+    iteration, async (off-thread write overlapped with the next multiply)
+    vs sync (blocking write). Overhead is measured against the plain
+    ``mcl_iterate`` end-to-end time; bytes are per completed save."""
+    import tempfile
+
+    from repro.runtime.resilient import ResilientConfig
+    from repro.sparse_apps.mcl import mcl_iterate_resilient
+
+    rows = []
+    cfg = MCLConfig(max_iters=max_iters, per_process_memory=tight,
+                    force_num_batches=nb)
+    for variant, async_save in (("async", True), ("sync", False)):
+        with tempfile.TemporaryDirectory() as d:
+            rc = ResilientConfig(ckpt_dir=d, ckpt_every=1,
+                                 async_save=async_save, resume=False)
+            t0 = time.perf_counter()
+            _, hist, rep = mcl_iterate_resilient(a, grid, cfg, rc)
+            wall = (time.perf_counter() - t0) * 1e3
+        saves = max(len(hist), 1)
+        rows.append(dict(
+            op="checkpoint", variant=variant, wall_ms=wall,
+            overhead_ms_per_iter=max(wall - base_ms, 0.0) / saves,
+            bytes_per_save=rep.checkpoint_bytes // saves,
+            checkpoint_stalls=rep.checkpoint_stalls,
+            checkpoint_stall_ms=rep.checkpoint_stall_s * 1e3,
+            iters=len(hist),
+        ))
     return rows
 
 

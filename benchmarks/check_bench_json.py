@@ -45,6 +45,20 @@ SUITE_ROWS = {
         ("local_multiply", "hash"): ("compression_factor", "scratch_bytes"),
         ("summary", "acceptance"): ("hash_scratch_reduction",),
     },
+    "mcl_pipeline": {
+        ("mcl_e2e", "device"): ("iters", "host_bytes"),
+        ("mcl_e2e", "host"): ("iters", "host_bytes"),
+        ("summary", "device_vs_host"): (
+            "speedup_device_vs_host", "host_transfer_reduction",
+        ),
+        # durability lane: per-iteration checkpoint overhead, async vs sync
+        ("checkpoint", "async"): (
+            "overhead_ms_per_iter", "bytes_per_save", "checkpoint_stalls",
+        ),
+        ("checkpoint", "sync"): (
+            "overhead_ms_per_iter", "bytes_per_save", "checkpoint_stalls",
+        ),
+    },
 }
 
 

@@ -68,8 +68,10 @@ from .summa3d import (
     summa3d_fused_step,
     summa3d_sparse_step,
 )
+from .sparse import hstack_remap
 from .symbolic import (
     HASH_LOAD_FACTOR,
+    HASH_SLOT_BYTES,
     KBinPlan,
     batch_count,
     batch_count_lower_bound,
@@ -617,6 +619,111 @@ def batch_column_map(n: int, grid: Grid, num_batches: int, batch: int) -> np.nda
 # ---------------------------------------------------------------------------
 # The batched driver (Alg. 4) — pipelined scheduler
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RunReport:
+    """Structured robustness accounting for one driver run or iterated loop.
+
+    ``batched_summa3d`` fills the ladder fields (retries / replans /
+    degradations); the resilient iterated loops (`runtime/resilient.py`)
+    merge per-iteration reports and add the checkpoint / straggler / restart
+    fields. JSON round-trips via `to_dict`/`from_dict` so the report itself
+    survives a checkpoint.
+    """
+
+    retries: int = 0  # overflow retry dispatches (sync ladder steps)
+    sel_retries: int = 0  # selection-capacity retries among those
+    replans: int = 0  # batches replanned at finer batching (degradation)
+    ladder_blocked: int = 0  # cap doublings refused by the memory ceiling
+    degraded_batches: Tuple[Tuple[int, int], ...] = ()  # (batch, split)
+    straggler_events: int = 0  # EWMA watchdog firings (iterated loops)
+    restarts: int = 0  # preemption restore-and-continue count
+    refused_restores: int = 0  # corrupt checkpoints refused at restore
+    checkpoint_stalls: int = 0  # saves that blocked on a prior in-flight write
+    checkpoint_stall_s: float = 0.0
+    checkpoint_bytes: int = 0  # total checkpoint bytes written
+
+    def merged(self, other: "RunReport") -> "RunReport":
+        """Field-wise accumulation (counts add, degradations concatenate)."""
+        return RunReport(
+            retries=self.retries + other.retries,
+            sel_retries=self.sel_retries + other.sel_retries,
+            replans=self.replans + other.replans,
+            ladder_blocked=self.ladder_blocked + other.ladder_blocked,
+            degraded_batches=self.degraded_batches + other.degraded_batches,
+            straggler_events=self.straggler_events + other.straggler_events,
+            restarts=self.restarts + other.restarts,
+            refused_restores=self.refused_restores + other.refused_restores,
+            checkpoint_stalls=self.checkpoint_stalls + other.checkpoint_stalls,
+            checkpoint_stall_s=self.checkpoint_stall_s + other.checkpoint_stall_s,
+            checkpoint_bytes=self.checkpoint_bytes + other.checkpoint_bytes,
+        )
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["degraded_batches"] = [list(x) for x in self.degraded_batches]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RunReport":
+        d = dict(d)
+        d["degraded_batches"] = tuple(
+            tuple(int(v) for v in x) for x in d.get("degraded_batches", ())
+        )
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+class _LadderBlocked(Exception):
+    """Raised inside the retry ladder when the next cap doubling would blow
+    the per-process memory ceiling — caught by the degradation path, which
+    replans the batch at finer batching instead of OOMing."""
+
+
+@partial(jax.jit, static_argnames=("grid",))
+def _merge_split_batches(parts: Tuple[DistSparse, ...], grid: Grid) -> DistSparse:
+    """Column-concat ``d`` sub-batch products (finer plan ``nb·d``) back into
+    ONE batch of the original ``nb``-batch plan.
+
+    Block-cyclic algebra: original batch ``bi`` under plan ``nb`` covers the
+    same global columns as batches ``{d·bi, …, d·bi+d−1}`` under plan
+    ``nb·d``, and sub-batch ``d·bi+q``'s tile layer holds exactly slice
+    ``q`` (width ``wbl/d``) of every original batch block — so the merge is
+    an offset column concat + row-major resort. The merged entry set equals
+    the undegraded batch's, so consumers see an identical product (only the
+    static cap is the sum of the sub caps).
+    """
+    parts = tuple(parts)
+    sub_w = parts[0].tile_shape[1]
+    widths = [sub_w] * len(parts)
+    cap = sum(p.cap for p in parts)
+    tm = parts[0].tile_shape[0]
+    wbl = sub_w * len(parts)
+
+    def step(*tiles):
+        mats = [_squeeze_tile(t) for t in tiles]
+        merged, _ = hstack_remap(mats, widths, cap)  # cap = Σ caps: lossless
+        merged = merged.sort_rowmajor()
+        return (
+            merged.rows[None, None, None], merged.cols[None, None, None],
+            merged.vals[None, None, None], merged.nnz[None, None, None],
+        )
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    fn = shard_map(
+        step, mesh=grid.mesh,
+        in_specs=tuple(dist_spec(p, spec3) for p in parts),
+        out_specs=(spec3,) * 4,
+        check_vma=False,
+    )
+    rows, cols, vals, nnz = fn(*parts)
+    c0 = parts[0]
+    return DistSparse(
+        rows=rows, cols=cols, vals=vals, nnz=nnz,
+        shape=(c0.shape[0], c0.shape[1] * len(parts)),
+        tile_shape=(tm, wbl), grid_shape=c0.grid_shape, kind="C",
+    )
+
+
 @dataclasses.dataclass
 class BatchedResult:
     plan: BatchPlan
@@ -626,6 +733,7 @@ class BatchedResult:
     binned_caps: Optional[BinnedCaps] = None  # the static BinnedCaps used
     local_path: str = "esc"  # local multiply actually executed
     hash_caps: Optional[HashCaps] = None  # the static HashCaps used (hash)
+    report: RunReport = dataclasses.field(default_factory=RunReport)
 
 
 def batched_summa3d(
@@ -656,6 +764,7 @@ def batched_summa3d(
     kbin_caps_floor: Optional[BinnedCaps] = None,
     local_path: str = "auto",
     hash_caps_floor: Optional[HashCaps] = None,
+    degrade: bool = True,
 ) -> BatchedResult:
     """Multiply A·B in batches; the consumer sees each batch then it's freed.
 
@@ -709,6 +818,17 @@ def batched_summa3d(
     made per plan (not per batch) so iterated runs keep ONE executable per
     path; ``hash_caps_floor`` keeps its static caps monotone across
     iterations.
+
+    ``degrade`` (default on) bounds the retry ladder at a per-process memory
+    ceiling: when doubling the multiply caps would exceed
+    ``max(per_process_memory, footprint(planned caps))`` — the planned-caps
+    arm keeps legitimately-over-budget plans (slack, uncharged scratch)
+    runnable while refusing runaway growth beyond them — the failing batch
+    is REPLANNED at finer batching (its columns run as ``d`` sub-batches
+    under a ``nb·d`` plan, then column-concat back to the original batch
+    extent) instead of OOMing. Every retry/replan lands in the structured
+    ``BatchedResult.report`` (`RunReport`). ``degrade=False`` restores the
+    unbounded ladder.
     """
     assert local_path in ("auto", "esc", "binned", "hash"), local_path
     # the plan only budgets the hash path when the driver could dispatch it:
@@ -771,6 +891,31 @@ def batched_summa3d(
 
     caps, sel_cap, mask_cap = plan.caps, plan.sel_cap, plan.mask_sel_cap
     retries = 0
+    rep = {"sel_retries": 0, "replans": 0, "ladder_blocked": 0,
+           "degraded": []}
+
+    # --- bounded retry ladder (graceful degradation) -----------------------
+    # Footprint model for a capacity plan, aligned with Alg. 3's budget:
+    # r bytes per stored entry of inputs + selection + the batch's stored
+    # intermediate (ESC/binned expansion scratch, or the hash table +
+    # merged survivors). The ceiling takes a max with the PLANNED caps'
+    # footprint: a plan is allowed to exceed the strict budget (slack and
+    # uncharged scratch make that routine at tight budgets), but the ladder
+    # may never grow beyond whichever is larger.
+    max_nnz_a = int(np.asarray(a.nnz).max())
+    max_nnz_b = int(np.asarray(b.nnz).max())
+
+    def _footprint(caps_: BatchCaps, sel_cap_: int, hc_) -> int:
+        if hc_ is not None:
+            inter = hc_.table_cap * HASH_SLOT_BYTES + r_bytes * caps_.d_cap
+        else:
+            inter = r_bytes * caps_.flops_cap
+        return (
+            r_bytes * (max_nnz_a + max_nnz_b + sel_cap_)
+            + inter + reserved_bytes
+        )
+
+    ladder_ceiling = max(per_process_memory, _footprint(caps, sel_cap, hc))
 
     def dispatch(
         bi: int, caps_: BatchCaps, sel_cap_: int, kb_, hc_, mask_cap_: int
@@ -794,20 +939,36 @@ def batched_summa3d(
 
     def grow(
         o: np.ndarray, caps_: BatchCaps, sel_cap_: int, kb_, hc_,
-        mask_cap_: int,
+        mask_cap_: int, record: bool = True,
     ):
         """Next capacity plan after an overflow: selection first (a truncated
         selection makes the multiply flags unreliable), multiply second.
         The mask-slice capacity is exact, but it is doubled alongside the
-        multiply caps anyway so the retry ladder stays monotone."""
+        multiply caps anyway so the retry ladder stays monotone.
+
+        With ``degrade`` on, a multiply-cap doubling that would exceed the
+        memory ceiling raises `_LadderBlocked` instead — the caller replans
+        at finer batching. ``record=False`` (degraded sub-batches) skips the
+        ``used``-floor bookkeeping: sub-plan caps live in a different static
+        signature space than the reported plan."""
         if o[0] > 0:
             sel_cap_ = min(_rup8(max(sel_cap_ * 2, 8)), b.cap)
+            rep["sel_retries"] += 1
         elif o[1] > 0:
-            caps_ = caps_.doubled()
+            cand_caps = caps_.doubled()
+            cand_hc = hc_.doubled() if hc_ is not None else None
+            if degrade and _footprint(cand_caps, sel_cap_, cand_hc) > ladder_ceiling:
+                rep["ladder_blocked"] += 1
+                raise _LadderBlocked(
+                    f"cap doubling to {cand_caps} exceeds the "
+                    f"{ladder_ceiling}-byte ceiling"
+                )
+            caps_, hc_ = cand_caps, cand_hc
             kb_ = kb_.doubled() if kb_ is not None else None
-            hc_ = hc_.doubled() if hc_ is not None else None
             if mask is not None:
                 mask_cap_ = min(mask_cap_ * 2, mask.cap)
+        if not record:
+            return caps_, sel_cap_, kb_, hc_, mask_cap_
         used["sel"] = max(used["sel"], sel_cap_)
         used["mask"] = max(used["mask"], mask_cap_)
         used["caps"] = BatchCaps(*(
@@ -831,22 +992,94 @@ def batched_summa3d(
         return caps_, sel_cap_, kb_, hc_, mask_cap_
 
     def run_batch_sync(
-        bi: int, caps_: BatchCaps, sel_cap_: int, kb_, hc_, mask_cap_: int
+        bi: int, caps_: BatchCaps, sel_cap_: int, kb_, hc_, mask_cap_: int,
+        dispatch_fn=None, record: bool = True,
     ):
         """The kept, tested synchronous retry loop (§IV-A robustness)."""
         nonlocal retries
+        dispatch_fn = dispatch_fn or dispatch
         for _ in range(max_retries + 1):
-            c_batch, ovf = dispatch(bi, caps_, sel_cap_, kb_, hc_, mask_cap_)
+            c_batch, ovf = dispatch_fn(bi, caps_, sel_cap_, kb_, hc_, mask_cap_)
             o = np.asarray(ovf)
             if not o.any():
                 return c_batch
             retries += 1
             caps_, sel_cap_, kb_, hc_, mask_cap_ = grow(
-                o, caps_, sel_cap_, kb_, hc_, mask_cap_
+                o, caps_, sel_cap_, kb_, hc_, mask_cap_, record=record
             )
         raise RuntimeError(
             f"batch {bi}: capacity overflow persisted after {max_retries} retries"
         )
+
+    def run_batch_degraded(bi: int):
+        """Graceful degradation: batch ``bi``'s columns rerun as ``d``
+        sub-batches under a finer ``nb·d`` plan (whose caps fit the budget by
+        construction), then merge back to the original batch extent. Split
+        factor doubles while a sub-batch still hits the ceiling; a split
+        finer than the column structure allows surfaces as RuntimeError."""
+        forced = "hash" if use_hash else ("binned" if use_binned else "esc")
+        d = 2
+        while True:
+            try:
+                sub = plan_batches(
+                    a, b, grid, per_process_memory, r_bytes=r_bytes,
+                    slack=slack, force_num_batches=nb * d,
+                    reserved_bytes=reserved_bytes, mask=mask,
+                    mask_complement=mask_complement, local_path=forced,
+                )
+            except MemoryError as e:
+                raise RuntimeError(
+                    f"batch {bi}: memory ceiling hit and no finer batching "
+                    f"fits (split {d}x): {e}"
+                ) from e
+            nb_f = sub.num_batches
+            if nb_f % nb != 0:
+                # divisibility rounding broke sub-batch alignment — go finer
+                d = nb_f // nb + 1
+                continue
+            d_eff = nb_f // nb
+            sub_kb = (
+                BinnedCaps(sub.kbin.num_bins, sub.kbin.bin_cap_a,
+                           sub.kbin.bin_cap_b)
+                if use_binned else None
+            )
+            sub_bin = jnp.asarray(sub.kbin.bin_of_k) if use_binned else None
+            sub_hc = sub.hash_caps if use_hash else None
+
+            def sub_dispatch(sj, caps_, sel_cap_, kb_, hc_, mask_cap_):
+                return _fused_jit(
+                    a, b, jnp.int32(sj), sub_bin, mask, grid=grid,
+                    num_batches=nb_f, sel_cap=sel_cap_, caps=caps_,
+                    semiring=semiring, sorted_merge=sorted_merge, path=path,
+                    kbin=kb_, hashc=hc_, mask_cap=mask_cap_,
+                    mask_complement=mask_complement,
+                )
+
+            try:
+                parts = [
+                    run_batch_sync(
+                        d_eff * bi + q, sub.caps, sub.sel_cap, sub_kb, sub_hc,
+                        sub.mask_sel_cap, dispatch_fn=sub_dispatch,
+                        record=False,
+                    )
+                    for q in range(d_eff)
+                ]
+            except _LadderBlocked:
+                d = d_eff * 2  # a sub-batch still over budget: split finer
+                continue
+            rep["replans"] += 1
+            rep["degraded"].append((bi, d_eff))
+            if path == "dense":
+                return jnp.concatenate(parts, axis=-1)
+            return _merge_split_batches(tuple(parts), grid)
+
+    def run_batch_guarded(
+        bi: int, caps_: BatchCaps, sel_cap_: int, kb_, hc_, mask_cap_: int
+    ):
+        try:
+            return run_batch_sync(bi, caps_, sel_cap_, kb_, hc_, mask_cap_)
+        except _LadderBlocked:
+            return run_batch_degraded(bi)
 
     consumed = []
 
@@ -862,17 +1095,20 @@ def batched_summa3d(
             retries += 1
             # the speculatively postprocessed batch was built from a garbage
             # product — recompute synchronously and re-run the hook on it
-            c_post = post(
-                bi,
-                run_batch_sync(bi, *grow(o, caps, sel_cap, kb, hc, mask_cap)),
-            )
+            try:
+                c_batch = run_batch_sync(
+                    bi, *grow(o, caps, sel_cap, kb, hc, mask_cap)
+                )
+            except _LadderBlocked:
+                c_batch = run_batch_degraded(bi)
+            c_post = post(bi, c_batch)
         col_map = batch_column_map(n_cols, grid, nb, bi)
         consumed.append(consumer(bi, c_post, col_map))
 
     if not pipelined:
         for bi in range(nb):
             c_batch = post(
-                bi, run_batch_sync(bi, caps, sel_cap, kb, hc, mask_cap)
+                bi, run_batch_guarded(bi, caps, sel_cap, kb, hc, mask_cap)
             )
             col_map = batch_column_map(n_cols, grid, nb, bi)
             consumed.append(consumer(bi, c_batch, col_map))
@@ -892,7 +1128,13 @@ def batched_summa3d(
         mask_sel_cap=used["mask"], hash_caps=used["hashc"],
     )
     executed = "hash" if use_hash else ("binned" if use_binned else "esc")
+    report = RunReport(
+        retries=retries, sel_retries=rep["sel_retries"],
+        replans=rep["replans"], ladder_blocked=rep["ladder_blocked"],
+        degraded_batches=tuple(rep["degraded"]),
+    )
     return BatchedResult(
         plan=plan, num_retries=retries, consumed=consumed, binned=use_binned,
         binned_caps=used["kb"], local_path=executed, hash_caps=used["hashc"],
+        report=report,
     )

@@ -1,2 +1,16 @@
-from .driver import FailureInjector, RuntimeConfig, StragglerEvent, run_training  # noqa: F401
+from .driver import (  # noqa: F401
+    FailureInjector,
+    RuntimeConfig,
+    StragglerEvent,
+    StragglerEwma,
+    run_training,
+)
 from .hierarchical import ClusterState, CrossClusterDP  # noqa: F401
+from .resilient import (  # noqa: F401
+    IteratedResult,
+    PreemptionError,
+    ResilientConfig,
+    SpgemmFailureInjector,
+    restore_arrays_latest,
+    run_iterated,
+)

@@ -42,6 +42,36 @@ class StragglerEvent(Exception):
     pass
 
 
+class StragglerEwma:
+    """Per-step wall-time EWMA with compile-robust warm-up seeding.
+
+    The first steps pay jit compiles, so the EWMA is seeded with the
+    *minimum* of the first ``warmup + 1`` observations (a compile never makes
+    a step faster) — the warm-up fix from this driver, shared with the
+    resilient SpGEMM loop so both watchdogs arm identically. ``observe``
+    returns True when the armed watchdog flags the step as a straggler;
+    detection never fires during warm-up.
+    """
+
+    def __init__(self, factor: float = 3.0, alpha: float = 0.2,
+                 warmup: int = 3):
+        self.factor = factor
+        self.alpha = alpha
+        self.warmup = warmup
+        self.ewma: Optional[float] = None
+        self._warmup_dts: list = []
+
+    def observe(self, dt: float) -> bool:
+        if self.ewma is None:
+            self._warmup_dts.append(dt)
+            if len(self._warmup_dts) > self.warmup:
+                self.ewma = min(self._warmup_dts)
+            return False
+        slow = dt > self.factor * max(self.ewma, 1e-4)
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
 class FailureInjector:
     """Deterministic fault injection for tests: fail at given steps."""
 
@@ -84,10 +114,13 @@ def run_training(
     injector = injector or FailureInjector()
 
     def cold_or_warm_start():
+        # Drain any in-flight async write BEFORE listing the store:
+        # latest_step sweeps stale step_*.tmp dirs, and sweeping an
+        # in-progress writer's temp dir out from under it kills the save.
+        ckpt.wait()
         last = store.latest_step(rc.ckpt_dir)
         state = make_state()
         if last is not None:
-            ckpt.wait()
             state = store.restore(rc.ckpt_dir, last, state, shardings)
             log.info("restored checkpoint at step %d", last)
             return state, last
@@ -96,8 +129,7 @@ def run_training(
     state, start = cold_or_warm_start()
     losses: list = []
     rollbacks = restarts = straggler_events = 0
-    ewma: Optional[float] = None
-    warmup_dts: list = []  # early steps pay jit compiles — seed EWMA robustly
+    ewma = StragglerEwma(rc.straggler_factor, rc.ewma_alpha, rc.ewma_warmup)
     step = start
     skip_batches = set()
 
@@ -113,18 +145,10 @@ def run_training(
             state, metrics = step_fn(state, batch)
             loss = float(metrics["loss"])
             dt = time.perf_counter() - t0
-            if ewma is None:
-                # warm-up: compiles dominate the first steps; seed with the
-                # *minimum* observed (a compile never makes a step faster)
-                warmup_dts.append(dt)
-                if len(warmup_dts) > rc.ewma_warmup:
-                    ewma = min(warmup_dts)
-            else:
-                if dt > rc.straggler_factor * max(ewma, 1e-4):
-                    straggler_events += 1
-                    log.warning("straggler: step %d took %.3fs (ewma %.3fs)",
-                                step, dt, ewma)
-                ewma = (1 - rc.ewma_alpha) * ewma + rc.ewma_alpha * dt
+            if ewma.observe(dt):
+                straggler_events += 1
+                log.warning("straggler: step %d took %.3fs (ewma %.3fs)",
+                            step, dt, ewma.ewma)
 
             if not np.isfinite(loss):
                 raise FloatingPointError(f"non-finite loss at step {step}")

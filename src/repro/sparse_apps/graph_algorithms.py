@@ -27,6 +27,7 @@ the device paths.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import List, Optional, Tuple
 
@@ -37,11 +38,11 @@ from jax import lax
 
 from ..compat import shard_map
 from ..core import semiring as sr
-from ..core.batched import batched_summa3d
+from ..core.batched import RunReport, batched_summa3d
 from ..core.distsparse import DistSparse, dist_spec, scatter_to_grid
 from ..core.grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from ..core.sparse import SparseCOO, from_numpy_coo
-from ..core.summa3d import _pmax_grid, _psum_grid, _squeeze_tile
+from ..core.summa3d import BatchCaps, HashCaps, _pmax_grid, _psum_grid, _squeeze_tile
 from ..core.symbolic import rup_pow2
 from . import mcl as _mcl
 from .mcl import _sparse_batch_to_global, _to_host
@@ -345,3 +346,235 @@ def overlap_pairs_reference(a: SparseCOO, min_shared: int = 2):
             if c[i, j] >= min_shared:
                 out.append((i, j, int(round(c[i, j]))))
     return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# APSP — min-plus iterated squaring (tropical semiring), resilient-ready
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class APSPConfig:
+    """All-pairs shortest paths by iterated squaring over MIN_PLUS.
+
+    D ← D ⊗ D doubles the hop horizon each iteration; with an explicit zero
+    diagonal the iterate is entrywise non-increasing, D_k covers all paths of
+    ≤ 2^k hops, and the fixpoint (exact triplet equality between successive
+    iterates) IS the shortest-path matrix — at the fixpoint each entry's min
+    over candidates includes D[i,j] + 0 via the diagonal, so equality is
+    exact in float, not approximate. Absent entries are an implicit +inf
+    (unreachable); only finite distances are ever stored.
+    """
+
+    max_iters: Optional[int] = None  # None: ceil(log2(n-1)) + 1
+    per_process_memory: int = 1 << 26
+    force_num_batches: Optional[int] = None
+    lookahead: int = 2
+    r_bytes: int = 12
+    # 3-way local dispatch; k-binned is plus_times-only and auto-disabled,
+    # ESC and the hash accumulator are semiring-generic
+    local_path: str = "auto"
+
+
+@dataclasses.dataclass
+class APSPLoopState:
+    """Iterate + plan-signature floors (the checkpointed unit; mirrors
+    `mcl.MCLLoopState` minus the k-binned signature, which min_plus never
+    uses)."""
+
+    d: SparseCOO
+    it: int
+    history: List[dict]
+    report: RunReport
+    caps_floor: Optional[BatchCaps] = None
+    sel_floor: int = 0
+    nb_floor: int = 0
+    lp_arg: object = "auto"
+    hc_floor: Optional[HashCaps] = None
+
+
+def _apsp_triplets(d: SparseCOO):
+    k = int(d.nnz)
+    return (np.asarray(d.rows[:k]), np.asarray(d.cols[:k]),
+            np.asarray(d.vals[:k]))
+
+
+def apsp_init(a: SparseCOO) -> SparseCOO:
+    """D_0: edge weights with an explicit zero diagonal (dedup by MIN —
+    a self-loop never beats distance 0)."""
+    n = a.shape[0]
+    rr, cc, vv = _apsp_triplets(a)
+    rows = np.concatenate([rr, np.arange(n, dtype=rr.dtype)])
+    cols = np.concatenate([cc, np.arange(n, dtype=cc.dtype)])
+    vals = np.concatenate([vv.astype(np.float32), np.zeros(n, np.float32)])
+    key = rows.astype(np.int64) * n + cols.astype(np.int64)
+    uniq, inv = np.unique(key, return_inverse=True)
+    best = np.full(len(uniq), np.inf, np.float32)
+    np.minimum.at(best, inv, vals)
+    return from_numpy_coo(
+        (uniq // n).astype(np.int32), (uniq % n).astype(np.int32),
+        best, (n, n),
+    )
+
+
+def _apsp_cold_state(a: SparseCOO) -> APSPLoopState:
+    return APSPLoopState(d=apsp_init(a), it=0, history=[],
+                         report=RunReport())
+
+
+def _apsp_step(
+    state: APSPLoopState, grid: Grid, cfg: APSPConfig, verbose: bool = False,
+    injector=None, slack: Optional[float] = None,
+) -> Tuple[APSPLoopState, RunReport, bool]:
+    """ONE squaring D ← D ⊗ D; done = fixpoint (exact triplet equality)."""
+    it = state.it
+    t0 = time.perf_counter()
+    A_d = scatter_to_grid(state.d, grid, "A")
+    B_d = scatter_to_grid(state.d, grid, "B")
+    pieces = []
+
+    def consumer(bi, c_batch, col_map):
+        if injector is not None:
+            injector.maybe_straggle_batch(it, bi)
+            injector.maybe_preempt(it, batch=bi)
+        pieces.append(_sparse_batch_to_global(c_batch, col_map))
+        return None
+
+    res = batched_summa3d(
+        A_d, B_d, grid, per_process_memory=cfg.per_process_memory,
+        consumer=consumer, path="sparse", semiring=sr.MIN_PLUS,
+        force_num_batches=cfg.force_num_batches, lookahead=cfg.lookahead,
+        r_bytes=cfg.r_bytes, binned=False,
+        **({"slack": slack} if slack is not None else {}),
+        caps_pow2=True, caps_floor=state.caps_floor,
+        sel_cap_floor=state.sel_floor, num_batches_floor=state.nb_floor,
+        local_path=state.lp_arg, hash_caps_floor=state.hc_floor,
+    )
+    state.caps_floor, state.sel_floor = res.plan.caps, res.plan.sel_cap
+    state.nb_floor = res.plan.num_batches
+    state.lp_arg = res.local_path
+    if res.hash_caps is not None:
+        state.hc_floor = res.hash_caps
+    # batches cover disjoint column ranges with unique keys per batch, so the
+    # concatenation is globally key-unique (dedup-by-sum never triggers)
+    rows = np.concatenate([p[0] for p in pieces]).astype(np.int32)
+    cols = np.concatenate([p[1] for p in pieces]).astype(np.int32)
+    vals = np.concatenate([p[2] for p in pieces]).astype(np.float32)
+    n = state.d.shape[0]
+    order = np.argsort(rows.astype(np.int64) * n + cols, kind="stable")
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    pr, pc, pv = _apsp_triplets(state.d)
+    done = bool(
+        len(rows) == len(pr) and np.array_equal(rows, pr)
+        and np.array_equal(cols, pc) and np.array_equal(vals, pv)
+    )
+    dt = time.perf_counter() - t0
+    state.history.append({
+        "iter": it, "nnz": int(len(rows)), "wall_ms": dt * 1e3,
+        "retries": res.num_retries, "replans": res.report.replans,
+    })
+    if verbose:
+        print(f"[apsp] iter={it} nnz={len(rows)} wall={dt*1e3:.1f}ms")
+    state.d = from_numpy_coo(rows, cols, vals, (n, n))
+    state.it = it + 1
+    state.report = state.report.merged(res.report)
+    return state, res.report, done
+
+
+def _apsp_max_iters(n: int, cfg: APSPConfig) -> int:
+    if cfg.max_iters is not None:
+        return cfg.max_iters
+    return int(np.ceil(np.log2(max(n - 1, 2)))) + 1
+
+
+def apsp_iterate(
+    a: SparseCOO, grid: Grid, cfg: Optional[APSPConfig] = None,
+    verbose: bool = False,
+) -> Tuple[SparseCOO, List[dict]]:
+    """All-pairs shortest paths on the batched multiply; returns the distance
+    matrix (absent = unreachable) and per-iteration stats."""
+    cfg = cfg or APSPConfig()
+    state = _apsp_cold_state(a)
+    max_iters = _apsp_max_iters(a.shape[0], cfg)
+    while state.it < max_iters:
+        state, _, done = _apsp_step(state, grid, cfg, verbose)
+        if done:
+            break
+    return state.d, state.history
+
+
+def apsp_iterate_resilient(
+    a: SparseCOO, grid: Grid, cfg: Optional[APSPConfig],
+    rc, injector=None, verbose: bool = False,
+) -> Tuple[SparseCOO, List[dict], RunReport]:
+    """`apsp_iterate` under the durability harness (see
+    `runtime.resilient.run_iterated` and `mcl.mcl_iterate_resilient` — same
+    contract: checkpoint iterate + plan signature, refuse corrupt restores,
+    bitwise trajectory parity after a resume)."""
+    from ..runtime.resilient import run_iterated
+
+    cfg = cfg or APSPConfig()
+    n = a.shape[0]
+
+    def encode(state: APSPLoopState):
+        rr, cc, vv = _apsp_triplets(state.d)
+        arrays = {"D_rows": rr, "D_cols": cc, "D_vals": vv}
+        meta = {
+            "workload": "apsp",
+            "it": state.it,
+            "history": state.history,
+            "report": state.report.to_dict(),
+            "plan_sig": {
+                "caps": (list(dataclasses.astuple(state.caps_floor))
+                         if state.caps_floor is not None else None),
+                "sel": state.sel_floor,
+                "nb": state.nb_floor,
+                "local_path": state.lp_arg,
+                "hash_caps": (list(dataclasses.astuple(state.hc_floor))
+                              if state.hc_floor is not None else None),
+            },
+        }
+        return arrays, meta
+
+    def decode(arrays, meta) -> APSPLoopState:
+        sig = meta["plan_sig"]
+        return APSPLoopState(
+            # same constructor call as the step's epilogue → identical iterate
+            d=from_numpy_coo(arrays["D_rows"].astype(np.int32),
+                             arrays["D_cols"].astype(np.int32),
+                             arrays["D_vals"].astype(np.float32), (n, n)),
+            it=int(meta["it"]), history=list(meta["history"]),
+            report=RunReport.from_dict(meta["report"]),
+            caps_floor=(BatchCaps(*(int(x) for x in sig["caps"]))
+                        if sig["caps"] else None),
+            sel_floor=int(sig["sel"]), nb_floor=int(sig["nb"]),
+            lp_arg=sig["local_path"],
+            hc_floor=(HashCaps(*(int(x) for x in sig["hash_caps"]))
+                      if sig["hash_caps"] else None),
+        )
+
+    def step_fn(state, it, inj):
+        return _apsp_step(state, grid, cfg, verbose, injector=inj,
+                          slack=inj.capacity_slack(it))
+
+    result = run_iterated(
+        rc=rc, max_iters=_apsp_max_iters(n, cfg),
+        cold_start=lambda: _apsp_cold_state(a),
+        step_fn=step_fn, encode=encode, decode=decode,
+        injector=injector, verbose=verbose,
+    )
+    state = result.state
+    return state.d, state.history, state.report.merged(dataclasses.replace(
+        result.report, retries=0, sel_retries=0, replans=0, ladder_blocked=0,
+        degraded_batches=(),
+    ))
+
+
+def apsp_reference(a: SparseCOO) -> np.ndarray:
+    """Dense numpy Floyd–Warshall (absent = +inf, zero diagonal)."""
+    n = a.shape[0]
+    d = np.full((n, n), np.inf, np.float64)
+    rr, cc, vv = _apsp_triplets(a)
+    np.minimum.at(d, (rr, cc), vv.astype(np.float64))
+    np.fill_diagonal(d, np.minimum(np.diag(d), 0.0))
+    for k in range(n):
+        d = np.minimum(d, d[:, k:k + 1] + d[k:k + 1, :])
+    return d

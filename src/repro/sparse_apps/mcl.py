@@ -53,11 +53,14 @@ from jax import lax
 
 from ..compat import shard_map
 from ..core import distsparse
-from ..core.batched import batched_summa3d
+from ..core.batched import RunReport, batched_summa3d
 from ..core.distsparse import DistSparse, dist_spec, local_col_reduce
 from ..core.grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from ..core.sparse import SparseCOO, from_numpy_coo
 from ..core.summa3d import (
+    BatchCaps,
+    BinnedCaps,
+    HashCaps,
     _pmax_grid,
     _psum_grid,
     _squeeze_tile,
@@ -146,10 +149,13 @@ def _prune_topk_np(rows, cols, vals, n, thresh, k):
 def _record_iter(history, it, nnz, chaos, res, t0, t0_bytes, verbose):
     """Shared per-iteration epilogue: one history row schema for all three
     loop variants (device sparse / device dense / host reference) so the
-    bench and parity consumers can zip them together."""
+    bench and parity consumers can zip them together. The robustness fields
+    (retries/replans, from the driver's `RunReport`) ride along so the
+    resilient loop's trajectory log carries the degradation story too."""
     history.append({
         "iter": it, "nnz": nnz, "chaos": chaos,
         "batches": res.plan.num_batches, "flops": res.plan.total_flops,
+        "retries": res.num_retries, "replans": res.report.replans,
         "host_bytes": transfer_bytes() - t0_bytes,
         "wall_ms": (time.perf_counter() - t0) * 1e3,
     })
@@ -359,8 +365,137 @@ def _extract_dense_batch(tiles: np.ndarray, col_map: np.ndarray):
 
 
 # ---------------------------------------------------------------------------
-# Device-resident MCL loop
+# Device-resident MCL loop (explicit-state form: one step = one iteration)
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class MCLLoopState:
+    """Everything one sparse MCL iteration carries to the next — the
+    device-resident iterate (A/B operands) PLUS the full plan signature
+    (pow2/floor caps, pinned k-bin signature, hash caps, local path,
+    batch-count floor). The resilient loop checkpoints exactly this: the
+    arrays via the content-hashed store, the signature as manifest meta —
+    so a restored run replans to the IDENTICAL fused-step static signature
+    and hits the jit cache (zero extra retraces after a resume)."""
+
+    A: DistSparse
+    B: DistSparse
+    it: int
+    chaos: float
+    history: List[dict]
+    report: RunReport
+    caps_floor: Optional[BatchCaps] = None
+    sel_floor: int = 0
+    nb_floor: int = 0
+    binned_arg: object = "auto"
+    kbin_candidates: Optional[Tuple[int, ...]] = None
+    kb_floor: Optional[BinnedCaps] = None
+    lp_arg: object = "auto"
+    hc_floor: Optional[HashCaps] = None
+
+
+def _mcl_caps(n: int, grid: Grid, cfg: MCLConfig) -> Tuple[int, int, int]:
+    """Post-prune operand capacities (<= min(k, rows-in-tile) per column)
+    and the reserved-bytes charge they place on the multiply budget."""
+    tm = n // grid.pr
+    w = n // grid.pc
+    wl = w // grid.l
+    k = cfg.max_per_col
+    cap_a = _rup8(max(8, min(k, tm) * wl))
+    cap_b = _rup8(max(8, min(k, wl) * w))
+    return cap_a, cap_b, cfg.r_bytes * (cap_a + cap_b)
+
+
+def _mcl_cold_state(a: SparseCOO, grid: Grid, cfg: MCLConfig) -> MCLLoopState:
+    """Iteration-0 state: input scattered once, plan signature unpinned."""
+    return MCLLoopState(
+        A=_scatter(a, grid, "A"), B=_scatter(a, grid, "B"),
+        it=0, chaos=float("inf"), history=[], report=RunReport(),
+        binned_arg=cfg.binned, lp_arg=cfg.local_path,
+    )
+
+
+def _mcl_sparse_step(
+    state: MCLLoopState, grid: Grid, cfg: MCLConfig, verbose: bool = False,
+    injector=None, slack: Optional[float] = None,
+) -> Tuple[MCLLoopState, RunReport, bool]:
+    """ONE device-resident MCL iteration on explicit state.
+
+    Returns ``(state', per-iteration RunReport, converged)``. The plan
+    signature floors are pinned after the first iteration exactly as before
+    (pow2-quantized + monotone capacities → one fused-step executable, see
+    tests/test_mcl_pipeline.py). ``injector`` (resilient runs) hooks the
+    consumer — straggler sleeps and mid-iteration preemption fire at batch
+    granularity, inside the pipelined lookahead window; ``slack`` overrides
+    the planner's capacity slack (overflow-storm injection).
+    """
+    n = state.A.shape[0]
+    tm = n // grid.pr
+    k = cfg.max_per_col
+    cap_a, cap_b, reserved = _mcl_caps(n, grid, cfg)
+    it = state.it
+    t0_bytes = transfer_bytes()
+    t0 = time.perf_counter()
+    batches: List[DistSparse] = []
+    stats: List[dict] = []
+
+    def postprocess(bi, c_batch):
+        tn = c_batch.tile_shape[1]
+        new_cap = _rup8(max(8, min(min(k, tm) * tn, c_batch.cap)))
+        return _mcl_prune_sparse(
+            c_batch, grid=grid, inflation=cfg.inflation,
+            thresh=cfg.prune_threshold, k=k, new_cap=new_cap,
+        )
+
+    def consumer(bi, payload, col_map):
+        if injector is not None:
+            injector.maybe_straggle_batch(it, bi)
+            injector.maybe_preempt(it, batch=bi)
+        pruned, st = payload
+        batches.append(pruned)
+        stats.append(st)
+        return None
+
+    res = batched_summa3d(
+        state.A, state.B, grid,
+        per_process_memory=cfg.per_process_memory,
+        consumer=consumer, path="sparse",
+        postprocess=postprocess, reserved_bytes=reserved,
+        force_num_batches=cfg.force_num_batches,
+        lookahead=cfg.lookahead, r_bytes=cfg.r_bytes,
+        binned=state.binned_arg,
+        **({"slack": slack} if slack is not None else {}),
+        caps_pow2=True, caps_floor=state.caps_floor,
+        sel_cap_floor=state.sel_floor,
+        num_batches_floor=state.nb_floor,
+        kbin_candidates=state.kbin_candidates, kbin_caps_floor=state.kb_floor,
+        local_path=state.lp_arg, hash_caps_floor=state.hc_floor,
+    )
+    state.caps_floor, state.sel_floor = res.plan.caps, res.plan.sel_cap
+    state.nb_floor = res.plan.num_batches
+    state.binned_arg = res.binned  # pin the auto decision from iteration 1
+    state.lp_arg = res.local_path  # same for the 3-way local-path decision
+    if res.binned_caps is not None:
+        state.kbin_candidates = (res.binned_caps.num_bins,)
+        state.kb_floor = res.binned_caps
+    if res.hash_caps is not None:
+        state.hc_floor = res.hash_caps
+    state.A, state.B, ovf = reassemble_operands(
+        tuple(batches), grid, cap_a, cap_b
+    )
+    # ONE host sync per iteration, scalars only (convergence check)
+    chaos = max(float(_to_host(st["chaos"])) for st in stats)
+    nnz = sum(int(_to_host(st["nnz"])) for st in stats)
+    overflow = int(_to_host(ovf)) + sum(
+        int(_to_host(st["overflow"])) for st in stats
+    )
+    assert overflow == 0, f"iter {it}: pruned-capacity overflow {overflow}"
+    _record_iter(state.history, it, nnz, chaos, res, t0, t0_bytes, verbose)
+    state.chaos = chaos
+    state.it = it + 1
+    state.report = state.report.merged(res.report)
+    return state, res.report, chaos < cfg.converge_tol
+
+
 def mcl_iterate(
     a: SparseCOO, grid: Grid, cfg: MCLConfig, verbose: bool = False
 ) -> Tuple[SparseCOO, List[dict]]:
@@ -374,90 +509,165 @@ def mcl_iterate(
     dense-accumulator expansion with the Pallas ``col_prune`` postprocess
     (host reassembly per iteration — the small-scale reference
     configuration).
+
+    For long runs, `mcl_iterate_resilient` wraps the same per-iteration step
+    in the checkpoint/resume harness (`runtime.resilient.run_iterated`).
     """
     if cfg.path == "dense":
         return _mcl_iterate_dense(a, grid, cfg, verbose)
-    n = a.shape[0]
-    tm = n // grid.pr
-    w = n // grid.pc
-    wl = w // grid.l
-    k = cfg.max_per_col
-    # post-prune hard bounds: <= min(k, rows-in-tile) entries per column
-    cap_a = _rup8(max(8, min(k, tm) * wl))
-    cap_b = _rup8(max(8, min(k, wl) * w))
-    reserved = cfg.r_bytes * (cap_a + cap_b)
-    A = _scatter(a, grid, "A")
-    B = _scatter(a, grid, "B")
-    history: List[dict] = []
-    # pow2-quantized + monotone (running max) capacities: per-iteration nnz
-    # drift then maps onto ONE static signature for the fused step, so every
-    # iteration after the first hits the jit cache (ROADMAP MCL (b); the
-    # compile-count contract is asserted in tests/test_mcl_pipeline.py).
-    # The k-binned local multiply is part of that signature, so its on/off
-    # decision, bin count, and bin capacities are pinned after iteration 1.
-    caps_floor = None
-    sel_floor = 0
-    nb_floor = 0
-    binned_arg = cfg.binned
-    kbin_candidates = None
-    kb_floor = None
-    lp_arg = cfg.local_path
-    hc_floor = None
-    for it in range(cfg.max_iters):
-        t0_bytes = transfer_bytes()
-        t0 = time.perf_counter()
-        batches: List[DistSparse] = []
-        stats: List[dict] = []
-
-        def postprocess(bi, c_batch):
-            tn = c_batch.tile_shape[1]
-            new_cap = _rup8(max(8, min(min(k, tm) * tn, c_batch.cap)))
-            return _mcl_prune_sparse(
-                c_batch, grid=grid, inflation=cfg.inflation,
-                thresh=cfg.prune_threshold, k=k, new_cap=new_cap,
-            )
-
-        def consumer(bi, payload, col_map):
-            pruned, st = payload
-            batches.append(pruned)
-            stats.append(st)
-            return None
-
-        res = batched_summa3d(
-            A, B, grid,
-            per_process_memory=cfg.per_process_memory,
-            consumer=consumer, path="sparse",
-            postprocess=postprocess, reserved_bytes=reserved,
-            force_num_batches=cfg.force_num_batches,
-            lookahead=cfg.lookahead, r_bytes=cfg.r_bytes, binned=binned_arg,
-            caps_pow2=True, caps_floor=caps_floor, sel_cap_floor=sel_floor,
-            num_batches_floor=nb_floor,
-            kbin_candidates=kbin_candidates, kbin_caps_floor=kb_floor,
-            local_path=lp_arg, hash_caps_floor=hc_floor,
-        )
-        caps_floor, sel_floor = res.plan.caps, res.plan.sel_cap
-        nb_floor = res.plan.num_batches
-        binned_arg = res.binned  # pin the auto decision from iteration 1
-        lp_arg = res.local_path  # same for the 3-way local-path decision
-        if res.binned_caps is not None:
-            kbin_candidates = (res.binned_caps.num_bins,)
-            kb_floor = res.binned_caps
-        if res.hash_caps is not None:
-            hc_floor = res.hash_caps
-        A, B, ovf = reassemble_operands(tuple(batches), grid, cap_a, cap_b)
-        # ONE host sync per iteration, scalars only (convergence check)
-        chaos = max(float(_to_host(st["chaos"])) for st in stats)
-        nnz = sum(int(_to_host(st["nnz"])) for st in stats)
-        overflow = int(_to_host(ovf)) + sum(
-            int(_to_host(st["overflow"])) for st in stats
-        )
-        assert overflow == 0, f"iter {it}: pruned-capacity overflow {overflow}"
-        _record_iter(history, it, nnz, chaos, res, t0, t0_bytes, verbose)
-        if chaos < cfg.converge_tol:
+    state = _mcl_cold_state(a, grid, cfg)
+    while state.it < cfg.max_iters:
+        state, _, done = _mcl_sparse_step(state, grid, cfg, verbose)
+        if done:
             break
-    final = distsparse.gather_to_global(A)
-    _TRANSFER_BYTES[0] += _dist_bytes(A)
-    return final, history
+    final = distsparse.gather_to_global(state.A)
+    _TRANSFER_BYTES[0] += _dist_bytes(state.A)
+    return final, state.history
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint codec + resilient loop (durability harness)
+# ---------------------------------------------------------------------------
+def _dist_to_arrays(d: DistSparse, prefix: str, arrays: dict) -> None:
+    arrays[f"{prefix}_rows"] = np.asarray(d.rows)
+    arrays[f"{prefix}_cols"] = np.asarray(d.cols)
+    arrays[f"{prefix}_vals"] = np.asarray(d.vals)
+    arrays[f"{prefix}_nnz"] = np.asarray(d.nnz)
+
+
+def _dist_from_arrays(
+    arrays: dict, prefix: str, grid: Grid, shape, tile_shape, kind: str
+) -> DistSparse:
+    """Re-device_put checkpointed tiles with the CURRENT grid's shardings
+    (elastic restore: the saved mesh layout is irrelevant)."""
+    shard = grid.tile_sharding()
+    nnz_shard = jax.sharding.NamedSharding(
+        grid.mesh, jax.sharding.PartitionSpec(*grid.axis_names)
+    )
+    return DistSparse(
+        rows=jax.device_put(arrays[f"{prefix}_rows"], shard),
+        cols=jax.device_put(arrays[f"{prefix}_cols"], shard),
+        vals=jax.device_put(arrays[f"{prefix}_vals"], shard),
+        nnz=jax.device_put(arrays[f"{prefix}_nnz"], nnz_shard),
+        shape=tuple(shape), tile_shape=tuple(tile_shape),
+        grid_shape=(grid.pr, grid.pc, grid.l), kind=kind,
+    )
+
+
+def _plan_sig_encode(state: MCLLoopState) -> dict:
+    """JSON-safe plan signature: everything `plan_batches` needs to rebuild
+    the identical fused-step static signature after a restore."""
+    return {
+        "caps": (
+            list(dataclasses.astuple(state.caps_floor))
+            if state.caps_floor is not None else None
+        ),
+        "sel": state.sel_floor,
+        "nb": state.nb_floor,
+        "binned": state.binned_arg,
+        "kbin_candidates": (
+            list(state.kbin_candidates) if state.kbin_candidates else None
+        ),
+        "kb": (
+            list(dataclasses.astuple(state.kb_floor))
+            if state.kb_floor is not None else None
+        ),
+        "local_path": state.lp_arg,
+        "hash_caps": (
+            list(dataclasses.astuple(state.hc_floor))
+            if state.hc_floor is not None else None
+        ),
+    }
+
+
+def _plan_sig_decode(state: MCLLoopState, sig: dict) -> None:
+    state.caps_floor = (
+        BatchCaps(*(int(x) for x in sig["caps"])) if sig["caps"] else None
+    )
+    state.sel_floor = int(sig["sel"])
+    state.nb_floor = int(sig["nb"])
+    state.binned_arg = sig["binned"]
+    state.kbin_candidates = (
+        tuple(int(x) for x in sig["kbin_candidates"])
+        if sig["kbin_candidates"] else None
+    )
+    state.kb_floor = (
+        BinnedCaps(*(int(x) for x in sig["kb"])) if sig["kb"] else None
+    )
+    state.lp_arg = sig["local_path"]
+    state.hc_floor = (
+        HashCaps(*(int(x) for x in sig["hash_caps"]))
+        if sig["hash_caps"] else None
+    )
+
+
+def mcl_iterate_resilient(
+    a: SparseCOO, grid: Grid, cfg: MCLConfig, rc: "ResilientConfig",
+    injector=None, verbose: bool = False,
+) -> Tuple[SparseCOO, List[dict], RunReport]:
+    """`mcl_iterate` under the durability harness: checkpoint every
+    ``rc.ckpt_every`` iterations (device iterate + plan signature), resume
+    from ``store.latest_step(rc.ckpt_dir)`` after a preemption (or on
+    launch, unless ``rc.resume=False``), refuse corrupt checkpoints, and
+    report retries/replans/stalls/stragglers in the returned `RunReport`.
+
+    The encode/decode round-trip is bitwise (i32/f32 host copies) and the
+    plan signature restores the exact floors, so a resumed run's trajectory
+    — chaos/nnz history AND the final matrix — is identical to the
+    uninterrupted run's, with zero extra fused-step retraces (the restored
+    operands replan to the same static signature; see tests).
+    """
+    from ..runtime.resilient import run_iterated
+
+    assert cfg.path == "sparse", "resilient MCL requires the sparse path"
+    n = a.shape[0]
+    tile_a = (n // grid.pr, n // grid.pc // grid.l)
+    tile_b = (n // grid.pr // grid.l, n // grid.pc)
+
+    def encode(state: MCLLoopState):
+        arrays: dict = {}
+        _dist_to_arrays(state.A, "A", arrays)
+        _dist_to_arrays(state.B, "B", arrays)
+        meta = {
+            "workload": "mcl",
+            "it": state.it,
+            "chaos": state.chaos,
+            "history": state.history,
+            "report": state.report.to_dict(),
+            "plan_sig": _plan_sig_encode(state),
+        }
+        return arrays, meta
+
+    def decode(arrays: dict, meta: dict) -> MCLLoopState:
+        state = MCLLoopState(
+            A=_dist_from_arrays(arrays, "A", grid, (n, n), tile_a, "A"),
+            B=_dist_from_arrays(arrays, "B", grid, (n, n), tile_b, "B"),
+            it=int(meta["it"]), chaos=float(meta["chaos"]),
+            history=list(meta["history"]),
+            report=RunReport.from_dict(meta["report"]),
+        )
+        _plan_sig_decode(state, meta["plan_sig"])
+        return state
+
+    def step_fn(state: MCLLoopState, it: int, inj):
+        return _mcl_sparse_step(
+            state, grid, cfg, verbose, injector=inj,
+            slack=inj.capacity_slack(it),
+        )
+
+    result = run_iterated(
+        rc=rc, max_iters=cfg.max_iters,
+        cold_start=lambda: _mcl_cold_state(a, grid, cfg),
+        step_fn=step_fn, encode=encode, decode=decode,
+        injector=injector, verbose=verbose,
+    )
+    state = result.state
+    final = distsparse.gather_to_global(state.A)
+    _TRANSFER_BYTES[0] += _dist_bytes(state.A)
+    return final, state.history, state.report.merged(dataclasses.replace(
+        result.report, retries=0, sel_retries=0, replans=0, ladder_blocked=0,
+        degraded_batches=(),
+    ))
 
 
 def _mcl_iterate_dense(

@@ -421,6 +421,80 @@ def case_overlap_device_filter():
           f"shrunk caps {seen_caps[:nb_seen]})")
 
 
+def case_mcl_kill_and_resume():
+    """Durability at 8 devices: a run preempted mid-flight and resumed from
+    its checkpoint reproduces the uninterrupted run bitwise — identical
+    nnz/chaos trajectory, identical final cluster partition — and replans to
+    the identical fused-step static signature (zero extra retraces)."""
+    import tempfile
+
+    from repro.core import summa3d
+    from repro.runtime.resilient import ResilientConfig, SpgemmFailureInjector
+    from repro.sparse_apps.mcl import mcl_iterate_resilient
+
+    grid = make_grid(2, 2, 2)
+    n = 64
+    a = _stochastic_blocks(n, blocks=2, intra_p=0.6, seed=3)
+    cfg = MCLConfig(max_iters=8, per_process_memory=1 << 24, max_per_col=8)
+    final0, hist0 = mcl_iterate(a, grid, cfg)
+
+    with tempfile.TemporaryDirectory() as d:
+        rc = ResilientConfig(ckpt_dir=d, ckpt_every=1)
+        inj = SpgemmFailureInjector(preempt_iters=(3,))
+        tc0 = summa3d.TRACE_COUNTS["fused_step"]
+        final1, hist1, rep = mcl_iterate_resilient(a, grid, cfg, rc,
+                                                   injector=inj)
+        tc1 = summa3d.TRACE_COUNTS["fused_step"]
+
+    assert rep.restarts == 1, rep
+    assert tc1 - tc0 == 0, (tc0, tc1)
+    assert [(h["nnz"], h["chaos"]) for h in hist1] == \
+           [(h["nnz"], h["chaos"]) for h in hist0]
+    lab0, lab1 = _labels(final0, n), _labels(final1, n)
+    for i in range(n):
+        np.testing.assert_array_equal(lab1 == lab1[i], lab0 == lab0[i])
+    nnz0, nnz1 = int(final0.nnz), int(final1.nnz)
+    assert nnz0 == nnz1
+    np.testing.assert_array_equal(np.asarray(final1.rows[:nnz1]),
+                                  np.asarray(final0.rows[:nnz0]))
+    np.testing.assert_array_equal(np.asarray(final1.cols[:nnz1]),
+                                  np.asarray(final0.cols[:nnz0]))
+    np.testing.assert_array_equal(np.asarray(final1.vals[:nnz1]),
+                                  np.asarray(final0.vals[:nnz0]))
+    assert rep.checkpoint_bytes > 0, rep
+    print(f"OK mcl_kill_and_resume (iters={len(hist1)}, "
+          f"ckpt_bytes={rep.checkpoint_bytes}, restarts={rep.restarts})")
+
+
+def case_apsp_min_plus():
+    """APSP iterated squaring over MIN_PLUS at 8 devices == numpy
+    Floyd-Warshall, including unreachable pairs (implicit +inf)."""
+    from repro.sparse_apps.graph_algorithms import (
+        APSPConfig,
+        apsp_iterate,
+        apsp_reference,
+    )
+
+    grid = make_grid(2, 2, 2)
+    n = 64
+    rng = np.random.default_rng(11)
+    from repro.core.sparse import from_numpy_coo
+    w = rng.random((n, n)).astype(np.float32) * 9 + 1
+    mask = rng.random((n, n)) < 0.06
+    np.fill_diagonal(mask, False)
+    r, c = np.nonzero(mask)
+    a = from_numpy_coo(r.astype(np.int32), c.astype(np.int32), w[r, c], (n, n))
+    D, hist = apsp_iterate(a, grid, APSPConfig(per_process_memory=1 << 24))
+    ref = apsp_reference(a)
+    got = np.full((n, n), np.inf, np.float64)
+    k = int(D.nnz)
+    got[np.asarray(D.rows[:k]), np.asarray(D.cols[:k])] = np.asarray(D.vals[:k])
+    assert (np.isfinite(got) == np.isfinite(ref)).all()
+    fin = np.isfinite(ref)
+    np.testing.assert_allclose(got[fin], ref[fin], rtol=1e-5)
+    print(f"OK apsp_min_plus (iters={len(hist)}, reachable={int(fin.sum())})")
+
+
 CASES = {n[len("case_"):]: f for n, f in list(globals().items())
          if n.startswith("case_")}
 

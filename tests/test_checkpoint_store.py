@@ -1,0 +1,204 @@
+"""Checkpoint store durability contract: crash consistency (atomic rename +
+stale-tmp sweep), corruption refusal (content hashes), defensive directory
+parsing, keep-N GC robustness, meta side channel, async accounting."""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.random((8, 4), np.float32)),
+        "step": jnp.asarray(seed, jnp.int32),
+    }
+
+
+class TestParsing:
+    def test_step_of_foreign_entries(self):
+        assert store._step_of("step_00000003") == 3
+        assert store._step_of("step_0001.bak") is None
+        assert store._step_of("step_") is None
+        assert store._step_of("step_12.tmp") is None
+        assert store._step_of("notes.txt") is None
+
+    def test_latest_step_ignores_foreign_entries(self, tmp_path):
+        store.save(str(tmp_path), 4, _state())
+        # operator droppings that int(d.split("_")[1]) would crash on
+        os.makedirs(tmp_path / "step_00000004.bak")
+        (tmp_path / "step_readme").write_text("junk")
+        (tmp_path / "other_7").write_text("junk")
+        assert store.latest_step(str(tmp_path)) == 4
+        assert store.steps_available(str(tmp_path)) == [4]
+
+    def test_latest_step_missing_dir(self, tmp_path):
+        assert store.latest_step(str(tmp_path / "nope")) is None
+
+
+class TestCrashConsistency:
+    def test_sweep_stale_tmp(self, tmp_path):
+        store.save(str(tmp_path), 2, _state())
+        stale = tmp_path / "step_00000005.tmp"
+        os.makedirs(stale)
+        (stale / "arrays.npz").write_bytes(b"partial write")
+        assert store.sweep_stale_tmp(str(tmp_path)) == 1
+        assert not stale.exists()
+        assert store.latest_step(str(tmp_path)) == 2
+
+    def test_kill_between_write_and_rename(self, tmp_path, monkeypatch):
+        """A crash after the temp-dir write but before the atomic rename must
+        leave the previous checkpoint intact and only a .tmp leftover."""
+        store.save(str(tmp_path), 1, _state(1))
+
+        def boom(src, dst):
+            raise OSError("killed before rename")
+
+        monkeypatch.setattr(os, "rename", boom)
+        with pytest.raises(OSError):
+            store.save(str(tmp_path), 2, _state(2))
+        monkeypatch.undo()
+        assert (tmp_path / "step_00000002.tmp").exists()
+        # next latest_step sweeps the leftover and still serves step 1
+        assert store.latest_step(str(tmp_path)) == 1
+        assert not (tmp_path / "step_00000002.tmp").exists()
+        back = store.restore(str(tmp_path), 1, _state(1))
+        np.testing.assert_array_equal(np.asarray(back["w"]),
+                                      np.asarray(_state(1)["w"]))
+
+
+class TestCorruptionRefusal:
+    def test_hash_mismatch_refused(self, tmp_path):
+        store.save(str(tmp_path), 3, _state())
+        d = tmp_path / "step_00000003"
+        with np.load(d / "arrays.npz") as z:
+            arrays = {k: z[k].copy() for k in z.files}
+        key = [k for k in arrays if "w" in k][0]
+        arrays[key][0, 0] += 1.0  # silent bit-flip
+        np.savez(d / "arrays.npz", **arrays)
+        with pytest.raises(IOError, match="hash mismatch"):
+            store.restore_arrays(str(tmp_path), 3)
+
+    def test_truncated_archive_refused(self, tmp_path):
+        store.save(str(tmp_path), 3, _state())
+        p = tmp_path / "step_00000003" / "arrays.npz"
+        size = os.path.getsize(p)
+        with open(p, "r+b") as f:
+            f.truncate(size // 2)
+        with pytest.raises(IOError, match="unreadable"):
+            store.restore_arrays(str(tmp_path), 3)
+
+    def test_missing_leaf_refused(self, tmp_path):
+        store.save(str(tmp_path), 3, _state())
+        d = tmp_path / "step_00000003"
+        with np.load(d / "arrays.npz") as z:
+            arrays = {k: z[k] for k in z.files if "w" not in k}
+        np.savez(d / "arrays.npz", **arrays)
+        with pytest.raises(IOError, match="missing"):
+            store.restore_arrays(str(tmp_path), 3)
+
+    def test_tree_mismatch_is_keyerror(self, tmp_path):
+        store.save(str(tmp_path), 3, _state())
+        with pytest.raises(KeyError, match="tree mismatch"):
+            store.restore(str(tmp_path), 3, {"w": jnp.zeros((8, 4))})
+
+
+class TestMetaAndElastic:
+    def test_meta_roundtrip(self, tmp_path):
+        meta = {"it": 7, "plan_sig": {"caps": [1, 2, 3, 4], "nb": 2}}
+        store.save(str(tmp_path), 7, _state(), meta=meta)
+        assert store.load_meta(str(tmp_path), 7) == meta
+        # meta rides in the manifest only — array payload identical contract
+        arrays = store.restore_arrays(str(tmp_path), 7)
+        assert len(arrays) == 2
+
+    def test_elastic_restore_new_sharding(self, tmp_path):
+        state = _state(4)
+        store.save(str(tmp_path), 1, state)
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("x",))
+        sh = {
+            "w": jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec("x", None)),
+            "step": jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec()),
+        }
+        back = store.restore(str(tmp_path), 1,
+                             jax.tree.map(jnp.zeros_like, state), sh)
+        np.testing.assert_array_equal(np.asarray(back["w"]),
+                                      np.asarray(state["w"]))
+        assert back["w"].sharding == sh["w"]
+
+
+class TestGC:
+    def test_keep_n_with_foreign_entries(self, tmp_path):
+        ck = store.AsyncCheckpointer(str(tmp_path), keep=2)
+        os.makedirs(tmp_path / "step_junk.bak")
+        for s in range(1, 5):
+            ck.save_sync(s, _state(s))
+        assert store.steps_available(str(tmp_path)) == [3, 4]
+        assert (tmp_path / "step_junk.bak").exists()  # never GC'd
+
+    def test_gc_survives_vanishing_dir(self, tmp_path, monkeypatch):
+        ck = store.AsyncCheckpointer(str(tmp_path), keep=1)
+        for s in (1, 2, 3):
+            store.save(str(tmp_path), s, _state(s))
+
+        real_rmtree = shutil.rmtree
+
+        def racing_rmtree(path, *a, **k):
+            real_rmtree(path, *a, **k)  # external cleaner got there first
+            raise FileNotFoundError(path)
+
+        monkeypatch.setattr(shutil, "rmtree", racing_rmtree)
+        ck._gc()  # must not raise
+        monkeypatch.undo()
+        assert store.steps_available(str(tmp_path)) == [3]
+
+    def test_gc_survives_missing_root(self, tmp_path):
+        ck = store.AsyncCheckpointer(str(tmp_path / "sub"), keep=1)
+        shutil.rmtree(tmp_path / "sub", ignore_errors=True)
+        ck._gc()  # whole dir vanished — no crash
+
+
+class TestAsyncCheckpointer:
+    def test_accounting(self, tmp_path):
+        ck = store.AsyncCheckpointer(str(tmp_path), keep=3)
+        ck.save(1, _state(1), meta={"it": 1})
+        ck.wait()
+        assert ck.last_saved == 1
+        assert ck.bytes_written > 0
+        assert store.load_meta(str(tmp_path), 1) == {"it": 1}
+
+    def test_background_error_surfaces_on_wait(self, tmp_path, monkeypatch):
+        ck = store.AsyncCheckpointer(str(tmp_path), keep=3)
+
+        def boom(*a, **k):
+            raise RuntimeError("disk full")
+
+        monkeypatch.setattr(store, "save", boom)
+        ck.save(2, _state(2))
+        ck._thread.join()
+        with pytest.raises(RuntimeError, match="disk full"):
+            ck.wait()
+
+    def test_stall_accounting(self, tmp_path, monkeypatch):
+        ck = store.AsyncCheckpointer(str(tmp_path), keep=3)
+        real_save = store.save
+
+        def slow_save(*a, **k):
+            import time
+            time.sleep(0.05)
+            return real_save(*a, **k)
+
+        monkeypatch.setattr(store, "save", slow_save)
+        ck.save(1, _state(1))
+        ck.save(2, _state(2))  # issued while 1 still writing → stall
+        ck.wait()
+        assert ck.stalls >= 1
+        assert ck.stall_s > 0

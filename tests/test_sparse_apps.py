@@ -21,6 +21,8 @@ CASES = [
     "masked_multibatch_grid",
     "overlap_pairs_exact",
     "overlap_device_filter",
+    "mcl_kill_and_resume",
+    "apsp_min_plus",
 ]
 
 
