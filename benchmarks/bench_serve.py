@@ -1,0 +1,100 @@
+"""Serving-engine suite — plan-cached multiply-as-a-service (``--suite serve``).
+
+Drives an open-loop mixed repeat/novel request stream through the
+``SpgemmEngine`` (admission control priced by the batched-plan footprint
+model, plan cache keyed on the pow2-quantized matrix signature, pipelined
+lookahead dispatch) and reports:
+
+  * per-request latency percentiles (p50/p99) and multiplies/sec,
+  * the plan-cache hit rate over the mixed phase,
+  * ``retraces_repeat`` — extra ``fused_step`` traces incurred by a repeat
+    request after the warm-up, the zero-retrace acceptance artifact.
+
+``run_serve_suite`` emits JSON rows for BENCH_serve.json. CPU wall times are
+NOT TPU predictions; the reproduced claim is the cache/admission shape
+(repeat traffic compiles nothing, over-budget traffic is split or deferred,
+never OOM-killed).
+"""
+import time
+
+import numpy as np
+
+from repro.core import summa3d
+from repro.core.gen import erdos_renyi
+from repro.core.grid import make_grid
+from repro.serve import MultiplyRequest, ServeConfig, SpgemmEngine
+
+from .common import emit
+
+
+def _pct(sorted_ms: list, q: float) -> float:
+    if not sorted_ms:
+        return 0.0
+    return sorted_ms[min(int(q * len(sorted_ms)), len(sorted_ms) - 1)]
+
+
+def run_serve_suite(n: int = 128, requests: int = 16,
+                    repeat_frac: float = 0.5, smoke: bool = False) -> list:
+    """The ``--suite serve`` entry: returns JSON-ready rows."""
+    if smoke:
+        n, requests = 64, 8
+    grid = make_grid(2, 2, 2)
+    eng = SpgemmEngine(grid, ServeConfig(per_process_memory=1 << 26))
+    a0 = erdos_renyi(n, 4.0, seed=7)
+    b0 = erdos_renyi(n, 4.0, seed=8)
+
+    # warm-up: one request populates the plan cache and compiles the
+    # fused-step executable for the repeat signature (excluded from timing)
+    eng.submit(MultiplyRequest(rid=-1, a=a0, b=b0))
+    eng.run_to_completion()
+    warm_hits, warm_misses = eng.stats["hits"], eng.stats["misses"]
+    warm_done = len(eng.done)
+
+    # open-loop mixed phase: all requests queued up front, engine drains
+    rng = np.random.default_rng(0)
+    for rid in range(requests):
+        if rng.random() < repeat_frac:
+            eng.submit(MultiplyRequest(rid=rid, a=a0, b=b0))
+        else:
+            eng.submit(MultiplyRequest(
+                rid=rid,
+                a=erdos_renyi(n, 4.0, seed=100 + 2 * rid),
+                b=erdos_renyi(n, 4.0, seed=101 + 2 * rid),
+            ))
+    t0 = time.perf_counter()
+    results = eng.run_to_completion()
+    wall_ms = (time.perf_counter() - t0) * 1e3
+    ok = [r for r in results[warm_done:] if r.status == "ok"]
+    lat = sorted(r.latency_ms for r in ok)
+    p50, p99 = _pct(lat, 0.5), _pct(lat, 0.99)
+    mps = len(ok) / (wall_ms / 1e3) if wall_ms > 0 else 0.0
+    hits = eng.stats["hits"] - warm_hits
+    misses = eng.stats["misses"] - warm_misses
+    hit_rate = hits / max(hits + misses, 1)
+
+    # zero-retrace acceptance probe: one more repeat after the mixed phase
+    tr0 = summa3d.TRACE_COUNTS["fused_step"]
+    eng.submit(MultiplyRequest(rid=requests, a=a0, b=b0))
+    eng.run_to_completion()
+    retraces_repeat = summa3d.TRACE_COUNTS["fused_step"] - tr0
+
+    emit("serve_e2e/open_loop", wall_ms * 1e3 / max(len(ok), 1),
+         f"p50={p50:.1f}ms p99={p99:.1f}ms {mps:.1f}/s")
+    emit("plan_cache/hit_rate", 0.0, f"hit_rate={hit_rate:.2f}")
+    emit("serve/retraces_repeat", 0.0, f"retraces={retraces_repeat}")
+    return [
+        dict(op="serve_e2e", variant="open_loop", wall_ms=wall_ms,
+             n=n, requests=len(ok), p50_ms=p50, p99_ms=p99,
+             multiplies_per_s=mps, deferred=eng.stats["deferred"],
+             refused=eng.stats["refused"], splits=eng.stats["splits"]),
+        dict(op="plan_cache", variant="hit_rate", wall_ms=0.0,
+             hit_rate=hit_rate, hits=hits, misses=misses),
+        dict(op="summary", variant="acceptance", wall_ms=0.0,
+             plan_cache_hit_rate=hit_rate, retraces_repeat=retraces_repeat,
+             p50_ms=p50, p99_ms=p99),
+    ]
+
+
+def run() -> None:
+    """CSV mode for ``--suite all``."""
+    run_serve_suite(smoke=True)

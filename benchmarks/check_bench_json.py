@@ -59,6 +59,15 @@ SUITE_ROWS = {
             "overhead_ms_per_iter", "bytes_per_save", "checkpoint_stalls",
         ),
     },
+    "serve_engine": {
+        ("serve_e2e", "open_loop"): (
+            "p50_ms", "p99_ms", "multiplies_per_s", "requests",
+        ),
+        ("plan_cache", "hit_rate"): ("hit_rate", "hits", "misses"),
+        ("summary", "acceptance"): (
+            "plan_cache_hit_rate", "retraces_repeat", "p50_ms", "p99_ms",
+        ),
+    },
 }
 
 

@@ -22,9 +22,12 @@ device-resident vs host-loop MCL comparison (per-iteration wall-ms and
 host-transfer bytes) and writes ``BENCH_mcl.json``. ``--suite graph`` runs
 the §V-B masked-SpGEMM workloads (masked vs unmasked triangle counting on
 R-MAT, on-grid vs host-filtered overlap detection) and writes
-``BENCH_graph.json``. Every BENCH_*.json artifact validates against the
-shared row schema via ``python -m benchmarks.check_bench_json`` (enforced
-in CI).
+``BENCH_graph.json``. ``--suite serve`` runs the plan-cached serving-engine
+suite (open-loop mixed repeat/novel traffic: p50/p99 latency,
+multiplies/sec, plan-cache hit rate, zero-retrace repeat probe) and writes
+``BENCH_serve.json``; ``--smoke`` shrinks it to CI size. Every BENCH_*.json
+artifact validates against the shared row schema via
+``python -m benchmarks.check_bench_json`` (enforced in CI).
 """
 import argparse
 import json
@@ -44,6 +47,7 @@ def run_all() -> None:
         bench_mcl,
         bench_roofline,
         bench_scaling,
+        bench_serve,
         bench_summa3d,
         bench_symbolic,
     )
@@ -57,6 +61,7 @@ def run_all() -> None:
     bench_scaling.run()         # Fig. 6/7/9 (alpha-beta projection)
     bench_mcl.run()             # Fig. 3 (HipMCL end-to-end)
     bench_graph.run()           # §V-B masked graph workloads
+    bench_serve.run()           # plan-cached serving engine
     bench_roofline.run()        # EXPERIMENTS.md section Roofline feed
 
 
@@ -113,10 +118,21 @@ def run_graph(json_path: pathlib.Path) -> None:
     _write_suite("graph_masked", bench_graph.run_graph_suite, json_path)
 
 
+def run_serve(json_path: pathlib.Path, smoke: bool = False) -> None:
+    from . import bench_serve
+
+    _write_suite(
+        "serve_engine",
+        lambda: bench_serve.run_serve_suite(smoke=smoke),
+        json_path,
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
-        "--suite", choices=("all", "local", "summa3d", "mcl", "graph"),
+        "--suite",
+        choices=("all", "local", "summa3d", "mcl", "graph", "serve"),
         default="all",
     )
     ap.add_argument(
@@ -126,7 +142,7 @@ def main() -> None:
     )
     ap.add_argument(
         "--smoke", action="store_true",
-        help="CI-sized shapes (summa3d suite only): same rows, tiny scale",
+        help="CI-sized shapes (summa3d/serve suites): same rows, tiny scale",
     )
     args = ap.parse_args()
     if args.suite == "local":
@@ -143,6 +159,10 @@ def main() -> None:
         run_graph(pathlib.Path(
             args.json_out or REPO_ROOT / "BENCH_graph.json"
         ))
+    elif args.suite == "serve":
+        run_serve(pathlib.Path(
+            args.json_out or REPO_ROOT / "BENCH_serve.json"
+        ), smoke=args.smoke)
     else:
         run_all()
 

@@ -46,7 +46,6 @@ host round-trip per batch), which doubles as the benchmark baseline.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from functools import partial
 from typing import Callable, Optional, Tuple
 
@@ -673,6 +672,29 @@ class RunReport:
         return cls(**{k: v for k, v in d.items() if k in known})
 
 
+def plan_footprint(
+    caps: BatchCaps,
+    sel_cap: int,
+    hash_caps: Optional[HashCaps],
+    *,
+    r_bytes: int,
+    max_nnz_a: int,
+    max_nnz_b: int,
+    reserved_bytes: int = 0,
+) -> int:
+    """Per-process bytes a capacity plan commits to, aligned with Alg. 3's
+    budget: ``r`` bytes per stored entry of inputs + selection + the batch's
+    stored intermediate (ESC/binned expansion scratch, or the hash table +
+    merged survivors). The retry ladder prices cap doublings against this
+    model, and the serving engine prices each admitted request with it.
+    """
+    if hash_caps is not None:
+        inter = hash_caps.table_cap * HASH_SLOT_BYTES + r_bytes * caps.d_cap
+    else:
+        inter = r_bytes * caps.flops_cap
+    return r_bytes * (max_nnz_a + max_nnz_b + sel_cap) + inter + reserved_bytes
+
+
 class _LadderBlocked(Exception):
     """Raised inside the retry ladder when the next cap doubling would blow
     the per-process memory ceiling — caught by the degradation path, which
@@ -895,24 +917,17 @@ def batched_summa3d(
            "degraded": []}
 
     # --- bounded retry ladder (graceful degradation) -----------------------
-    # Footprint model for a capacity plan, aligned with Alg. 3's budget:
-    # r bytes per stored entry of inputs + selection + the batch's stored
-    # intermediate (ESC/binned expansion scratch, or the hash table +
-    # merged survivors). The ceiling takes a max with the PLANNED caps'
-    # footprint: a plan is allowed to exceed the strict budget (slack and
-    # uncharged scratch make that routine at tight budgets), but the ladder
-    # may never grow beyond whichever is larger.
+    # The ceiling takes a max with the PLANNED caps' footprint
+    # (`plan_footprint`): a plan is allowed to exceed the strict budget
+    # (slack and uncharged scratch make that routine at tight budgets), but
+    # the ladder may never grow beyond whichever is larger.
     max_nnz_a = int(np.asarray(a.nnz).max())
     max_nnz_b = int(np.asarray(b.nnz).max())
 
     def _footprint(caps_: BatchCaps, sel_cap_: int, hc_) -> int:
-        if hc_ is not None:
-            inter = hc_.table_cap * HASH_SLOT_BYTES + r_bytes * caps_.d_cap
-        else:
-            inter = r_bytes * caps_.flops_cap
-        return (
-            r_bytes * (max_nnz_a + max_nnz_b + sel_cap_)
-            + inter + reserved_bytes
+        return plan_footprint(
+            caps_, sel_cap_, hc_, r_bytes=r_bytes, max_nnz_a=max_nnz_a,
+            max_nnz_b=max_nnz_b, reserved_bytes=reserved_bytes,
         )
 
     ladder_ceiling = max(per_process_memory, _footprint(caps, sel_cap, hc))
@@ -1113,14 +1128,14 @@ def batched_summa3d(
             col_map = batch_column_map(n_cols, grid, nb, bi)
             consumed.append(consumer(bi, c_batch, col_map))
     else:
-        inflight = deque()
+        # deferred import: runtime.resilient imports this module (RunReport)
+        from ..runtime.driver import LookaheadWindow
+
+        window = LookaheadWindow(lookahead, finish)
         for bi in range(nb):
             c_batch, ovf = dispatch(bi, caps, sel_cap, kb, hc, mask_cap)
-            inflight.append((bi, post(bi, c_batch), ovf))
-            if len(inflight) > lookahead:
-                finish(*inflight.popleft())
-        while inflight:
-            finish(*inflight.popleft())
+            window.push(bi, post(bi, c_batch), ovf)
+        window.drain()
     # report the capacities actually used (incl. any retry growth) so
     # iterated callers floor their next plan on reality, not the estimate
     plan = dataclasses.replace(

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,15 +93,10 @@ def tile_shape_for(kind: str, shape: Tuple[int, int], grid: Grid) -> Tuple[int, 
     raise ValueError(kind)
 
 
-def scatter_to_grid(
-    a: SparseCOO, grid: Grid, kind: str, cap_slack: float = 1.3, min_cap: int = 8
-) -> DistSparse:
-    """Host-side: partition a global SparseCOO into grid tiles (paper Fig. 1).
-
-    Capacity = max tile nnz × slack, uniform across tiles (SPMD requires a
-    static shape; the slack absorbs mild imbalance, and the symbolic step is
-    the principled sizing mechanism for the multiply outputs).
-    """
+def _tile_layout(a: SparseCOO, grid: Grid, kind: str):
+    """Tile-index math shared by scatter/count: returns
+    ``(tile_id, lr, lc, vals, tm, tn, counts)`` for the block layout of
+    ``kind`` on ``grid`` (tile_id row-major over (pr, pc, l))."""
     m, n = a.shape
     pr, pc, l = grid.pr, grid.pc, grid.l
     if kind in ("A", "C"):
@@ -134,7 +129,39 @@ def scatter_to_grid(
 
     tile_id = (ti * pc + tj) * l + tk
     counts = np.bincount(tile_id, minlength=pr * pc * l)
-    cap = max(int(np.ceil(counts.max() * cap_slack)), min_cap)
+    return tile_id, lr, lc, vals, tm, tn, counts
+
+
+def tile_nnz_counts(a: SparseCOO, grid: Grid, kind: str) -> np.ndarray:
+    """Per-tile nnz of ``a`` scattered as ``kind`` on ``grid`` (flat,
+    row-major over (pr, pc, l)) WITHOUT moving any data — the input to
+    capacity quantization (the serving engine's plan-cache key uses the
+    pow2-rounded max so repeat traffic shares one scatter capacity)."""
+    *_, counts = _tile_layout(a, grid, kind)
+    return counts
+
+
+def scatter_to_grid(
+    a: SparseCOO, grid: Grid, kind: str, cap_slack: float = 1.3,
+    min_cap: int = 8, cap: Optional[int] = None,
+) -> DistSparse:
+    """Host-side: partition a global SparseCOO into grid tiles (paper Fig. 1).
+
+    Capacity = max tile nnz × slack, uniform across tiles (SPMD requires a
+    static shape; the slack absorbs mild imbalance, and the symbolic step is
+    the principled sizing mechanism for the multiply outputs). An explicit
+    ``cap`` overrides the data-derived capacity (it must hold the fullest
+    tile) — the serving engine passes a pow2-quantized cap so equally-sized
+    inputs land in one static signature.
+    """
+    m, n = a.shape
+    pr, pc, l = grid.pr, grid.pc, grid.l
+    tile_id, lr, lc, vals, tm, tn, counts = _tile_layout(a, grid, kind)
+    nnz = int(a.nnz)
+    if cap is None:
+        cap = max(int(np.ceil(counts.max() * cap_slack)), min_cap)
+    else:
+        assert cap >= counts.max(), (cap, int(counts.max()))
 
     rows_t = np.full((pr * pc * l, cap), tm, np.int32)
     cols_t = np.full((pr * pc * l, cap), tn, np.int32)

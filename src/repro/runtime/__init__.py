@@ -1,5 +1,6 @@
 from .driver import (  # noqa: F401
     FailureInjector,
+    LookaheadWindow,
     RuntimeConfig,
     StragglerEvent,
     StragglerEwma,
@@ -11,6 +12,10 @@ from .resilient import (  # noqa: F401
     PreemptionError,
     ResilientConfig,
     SpgemmFailureInjector,
+    check_preemption,
+    clear_preemption,
+    install_preemption_handler,
+    preemption_requested,
     restore_arrays_latest,
     run_iterated,
 )

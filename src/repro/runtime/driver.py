@@ -18,6 +18,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
+from collections import deque
 from typing import Any, Callable, Dict, Optional
 
 import numpy as np
@@ -25,6 +26,36 @@ import numpy as np
 from ..checkpoint import store
 
 log = logging.getLogger("repro.runtime")
+
+
+class LookaheadWindow:
+    """Bounded in-flight window for pipelined dispatch.
+
+    ``push`` enqueues a dispatched unit of work; once more than ``depth``
+    units are in flight the oldest is completed via ``finish`` (which is
+    where the host first blocks on device results — overflow flags, batch
+    payloads). ``drain`` completes everything still in flight. The batched
+    SUMMA3D driver runs its per-batch pipeline through one window; the
+    serving engine shares a single window across concurrent requests so
+    independent multiplies interleave at batch granularity.
+    """
+
+    def __init__(self, depth: int, finish: Callable[..., None]):
+        self.depth = depth
+        self.finish = finish
+        self._inflight: deque = deque()
+
+    def push(self, *item) -> None:
+        self._inflight.append(item)
+        while len(self._inflight) > self.depth:
+            self.finish(*self._inflight.popleft())
+
+    def drain(self) -> None:
+        while self._inflight:
+            self.finish(*self._inflight.popleft())
+
+    def __len__(self) -> int:
+        return len(self._inflight)
 
 
 @dataclasses.dataclass

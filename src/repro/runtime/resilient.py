@@ -52,6 +52,50 @@ class PreemptionError(RuntimeError):
     """Injected (or real) preemption: the loop restores and continues."""
 
 
+# --- real-preemption translation (SIGTERM → PreemptionError) ---------------
+# Schedulers deliver preemption as a signal, not an exception; the handler
+# only flips this flag (signal-safe), and `check_preemption` — called at the
+# iteration boundary inside `run_iterated` — turns it into the same
+# `PreemptionError` the injector raises, so the restore path covers real
+# kills identically to injected ones.
+_PREEMPTION = {"requested": False}
+
+
+def _sigterm_handler(signum, frame):
+    _PREEMPTION["requested"] = True
+    log.warning("signal %d received — requesting preemption", signum)
+
+
+def install_preemption_handler(signals=None) -> None:
+    """Install the SIGTERM→`PreemptionError` translation for this process.
+
+    Launchers call this once before entering a resilient loop; subsequent
+    SIGTERMs set a flag that `run_iterated` converts into the restore path
+    at the next iteration boundary (a mid-step signal never corrupts an
+    in-flight checkpoint write).
+    """
+    import signal as _signal
+
+    for s in signals if signals is not None else (_signal.SIGTERM,):
+        _signal.signal(s, _sigterm_handler)
+
+
+def preemption_requested() -> bool:
+    return _PREEMPTION["requested"]
+
+
+def clear_preemption() -> None:
+    _PREEMPTION["requested"] = False
+
+
+def check_preemption() -> None:
+    """Raise (and clear — one restore per signal, not a restart storm) when
+    a translated signal is pending."""
+    if _PREEMPTION["requested"]:
+        _PREEMPTION["requested"] = False
+        raise PreemptionError("preemption signal received (SIGTERM)")
+
+
 @dataclasses.dataclass
 class ResilientConfig:
     """Knobs of the resilient iterated loop (checkpoint cadence + watchdog)."""
@@ -242,6 +286,7 @@ def run_iterated(
     while it < max_iters and not done:
         try:
             injector.maybe_preempt(it)
+            check_preemption()  # real SIGTERM, translated at the boundary
             t0 = time.perf_counter()
             state, rep_i, done = step_fn(state, it, injector)
             dt = time.perf_counter() - t0

@@ -1,1 +1,9 @@
-from .engine import EngineConfig, Request, ServeEngine  # noqa: F401
+from .engine import (  # noqa: F401
+    MultiplyRequest,
+    MultiplyResult,
+    PlanCacheEntry,
+    ServeConfig,
+    SpgemmEngine,
+    matrix_signature,
+)
+from .lm_engine import EngineConfig, Request, ServeEngine  # noqa: F401

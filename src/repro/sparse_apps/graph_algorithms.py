@@ -37,13 +37,21 @@ import numpy as np
 from jax import lax
 
 from ..compat import shard_map
+from ..core import distsparse
 from ..core import semiring as sr
 from ..core.batched import RunReport, batched_summa3d
 from ..core.distsparse import DistSparse, dist_spec, scatter_to_grid
 from ..core.grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from ..core.sparse import SparseCOO, from_numpy_coo
-from ..core.summa3d import BatchCaps, HashCaps, _pmax_grid, _psum_grid, _squeeze_tile
-from ..core.symbolic import rup_pow2
+from ..core.summa3d import (
+    BatchCaps,
+    HashCaps,
+    _pmax_grid,
+    _psum_grid,
+    _squeeze_tile,
+    reassemble_operands,
+)
+from ..core.symbolic import rup8, rup_pow2
 from . import mcl as _mcl
 from .mcl import _sparse_batch_to_global, _to_host
 
@@ -376,11 +384,12 @@ class APSPConfig:
 
 @dataclasses.dataclass
 class APSPLoopState:
-    """Iterate + plan-signature floors (the checkpointed unit; mirrors
-    `mcl.MCLLoopState` minus the k-binned signature, which min_plus never
-    uses)."""
+    """Device-resident iterate (A/B operands of the next squaring) +
+    plan-signature floors (the checkpointed unit; mirrors `mcl.MCLLoopState`
+    minus the k-binned signature, which min_plus never uses)."""
 
-    d: SparseCOO
+    A: DistSparse
+    B: DistSparse
     it: int
     history: List[dict]
     report: RunReport
@@ -415,34 +424,93 @@ def apsp_init(a: SparseCOO) -> SparseCOO:
     )
 
 
-def _apsp_cold_state(a: SparseCOO) -> APSPLoopState:
-    return APSPLoopState(d=apsp_init(a), it=0, history=[],
-                         report=RunReport())
+def _apsp_cold_state(a: SparseCOO, grid: Grid) -> APSPLoopState:
+    """Iteration-0 state: D_0 scattered ONCE as both operands (the only
+    scatters of a whole run — the loop stays on-grid after this)."""
+    d0 = apsp_init(a)
+    return APSPLoopState(
+        A=_mcl._scatter(d0, grid, "A"), B=_mcl._scatter(d0, grid, "B"),
+        it=0, history=[], report=RunReport(),
+    )
+
+
+def _apsp_caps(n: int, grid: Grid, cfg: APSPConfig) -> Tuple[int, int, int]:
+    """Reassembly capacities for the next iterate's operands. APSP never
+    prunes, so the only safe static bound is the dense tile (every (row,
+    col) of a tile at most once) — exact, so reassembly overflow is
+    impossible; tiny at the studied scales, and the reserved-bytes charge
+    keeps the multiply honest about the kept operands."""
+    tm = n // grid.pr
+    w = n // grid.pc
+    wl = w // grid.l
+    cap_a = rup8(max(8, tm * wl))
+    cap_b = rup8(max(8, wl * w))
+    return cap_a, cap_b, cfg.r_bytes * (cap_a + cap_b)
+
+
+@partial(jax.jit, static_argnames=("grid",))
+def _dist_equal_nnz(x: DistSparse, y: DistSparse, grid: Grid):
+    """Exact equality of two same-layout DistSparse iterates ON the grid +
+    the first argument's total nnz, as two replicated device scalars — the
+    APSP fixpoint check without a host gather. Tiles are canonicalized by a
+    row-major sort (entries are key-unique), so prefix comparison over the
+    smaller static capacity plus nnz equality is exact; at most two
+    executables per run (iteration 1 compares the reassembled cap against
+    the initial scatter cap, later iterations compare like caps)."""
+    kmin = min(x.cap, y.cap)
+
+    def step(x_t: DistSparse, y_t: DistSparse):
+        tx = _squeeze_tile(x_t).sort_rowmajor()
+        ty = _squeeze_tile(y_t).sort_rowmajor()
+        neq = (tx.nnz != ty.nnz).astype(jnp.int32)
+        idx = jnp.arange(kmin, dtype=jnp.int32)
+        live = idx < jnp.minimum(tx.nnz, ty.nnz)
+        mism = live & (
+            (tx.rows[:kmin] != ty.rows[:kmin])
+            | (tx.cols[:kmin] != ty.cols[:kmin])
+            | (tx.vals[:kmin] != ty.vals[:kmin])
+        )
+        bad = _psum_grid(neq + jnp.sum(mism.astype(jnp.int32)))
+        return bad, _psum_grid(tx.nnz)
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    spec0 = jax.sharding.PartitionSpec()
+    fn = shard_map(
+        step, mesh=grid.mesh,
+        in_specs=(dist_spec(x, spec3), dist_spec(y, spec3)),
+        out_specs=(spec0, spec0), check_vma=False,
+    )
+    return fn(x, y)
 
 
 def _apsp_step(
     state: APSPLoopState, grid: Grid, cfg: APSPConfig, verbose: bool = False,
     injector=None, slack: Optional[float] = None,
 ) -> Tuple[APSPLoopState, RunReport, bool]:
-    """ONE squaring D ← D ⊗ D; done = fixpoint (exact triplet equality)."""
+    """ONE squaring D ← D ⊗ D, device-resident: the batched products
+    reassemble into the next iterate's operands on the grid
+    (``summa3d.reassemble_operands``, like MCL) and the fixpoint test is an
+    on-grid exact comparison — only three scalars cross to the host per
+    iteration, and zero ``gather_to_global``/``scatter_to_grid`` calls
+    happen inside the loop."""
     it = state.it
     t0 = time.perf_counter()
-    A_d = scatter_to_grid(state.d, grid, "A")
-    B_d = scatter_to_grid(state.d, grid, "B")
-    pieces = []
+    n = state.A.shape[0]
+    cap_a, cap_b, reserved = _apsp_caps(n, grid, cfg)
+    batches: List[DistSparse] = []
 
     def consumer(bi, c_batch, col_map):
         if injector is not None:
             injector.maybe_straggle_batch(it, bi)
             injector.maybe_preempt(it, batch=bi)
-        pieces.append(_sparse_batch_to_global(c_batch, col_map))
+        batches.append(c_batch)
         return None
 
     res = batched_summa3d(
-        A_d, B_d, grid, per_process_memory=cfg.per_process_memory,
+        state.A, state.B, grid, per_process_memory=cfg.per_process_memory,
         consumer=consumer, path="sparse", semiring=sr.MIN_PLUS,
         force_num_batches=cfg.force_num_batches, lookahead=cfg.lookahead,
-        r_bytes=cfg.r_bytes, binned=False,
+        r_bytes=cfg.r_bytes, binned=False, reserved_bytes=reserved,
         **({"slack": slack} if slack is not None else {}),
         caps_pow2=True, caps_floor=state.caps_floor,
         sel_cap_floor=state.sel_floor, num_batches_floor=state.nb_floor,
@@ -453,27 +521,23 @@ def _apsp_step(
     state.lp_arg = res.local_path
     if res.hash_caps is not None:
         state.hc_floor = res.hash_caps
-    # batches cover disjoint column ranges with unique keys per batch, so the
-    # concatenation is globally key-unique (dedup-by-sum never triggers)
-    rows = np.concatenate([p[0] for p in pieces]).astype(np.int32)
-    cols = np.concatenate([p[1] for p in pieces]).astype(np.int32)
-    vals = np.concatenate([p[2] for p in pieces]).astype(np.float32)
-    n = state.d.shape[0]
-    order = np.argsort(rows.astype(np.int64) * n + cols, kind="stable")
-    rows, cols, vals = rows[order], cols[order], vals[order]
-    pr, pc, pv = _apsp_triplets(state.d)
-    done = bool(
-        len(rows) == len(pr) and np.array_equal(rows, pr)
-        and np.array_equal(cols, pc) and np.array_equal(vals, pv)
+    a_next, b_next, ovf = reassemble_operands(
+        tuple(batches), grid, cap_a, cap_b
     )
+    bad, nnz_dev = _dist_equal_nnz(a_next, state.A, grid=grid)
+    # ONE host sync per iteration, scalars only (fixpoint + accounting)
+    done = int(_to_host(bad)) == 0
+    nnz = int(_to_host(nnz_dev))
+    overflow = int(_to_host(ovf))
+    assert overflow == 0, f"iter {it}: reassembly overflow {overflow}"
+    state.A, state.B = a_next, b_next
     dt = time.perf_counter() - t0
     state.history.append({
-        "iter": it, "nnz": int(len(rows)), "wall_ms": dt * 1e3,
+        "iter": it, "nnz": nnz, "wall_ms": dt * 1e3,
         "retries": res.num_retries, "replans": res.report.replans,
     })
     if verbose:
-        print(f"[apsp] iter={it} nnz={len(rows)} wall={dt*1e3:.1f}ms")
-    state.d = from_numpy_coo(rows, cols, vals, (n, n))
+        print(f"[apsp] iter={it} nnz={nnz} wall={dt*1e3:.1f}ms")
     state.it = it + 1
     state.report = state.report.merged(res.report)
     return state, res.report, done
@@ -492,13 +556,15 @@ def apsp_iterate(
     """All-pairs shortest paths on the batched multiply; returns the distance
     matrix (absent = unreachable) and per-iteration stats."""
     cfg = cfg or APSPConfig()
-    state = _apsp_cold_state(a)
+    state = _apsp_cold_state(a, grid)
     max_iters = _apsp_max_iters(a.shape[0], cfg)
     while state.it < max_iters:
         state, _, done = _apsp_step(state, grid, cfg, verbose)
         if done:
             break
-    return state.d, state.history
+    final = distsparse.gather_to_global(state.A)
+    _mcl._TRANSFER_BYTES[0] += _mcl._dist_bytes(state.A)
+    return final, state.history
 
 
 def apsp_iterate_resilient(
@@ -513,10 +579,13 @@ def apsp_iterate_resilient(
 
     cfg = cfg or APSPConfig()
     n = a.shape[0]
+    tile_a = (n // grid.pr, n // grid.pc // grid.l)
+    tile_b = (n // grid.pr // grid.l, n // grid.pc)
 
     def encode(state: APSPLoopState):
-        rr, cc, vv = _apsp_triplets(state.d)
-        arrays = {"D_rows": rr, "D_cols": cc, "D_vals": vv}
+        arrays: dict = {}
+        _mcl._dist_to_arrays(state.A, "A", arrays)
+        _mcl._dist_to_arrays(state.B, "B", arrays)
         meta = {
             "workload": "apsp",
             "it": state.it,
@@ -537,10 +606,9 @@ def apsp_iterate_resilient(
     def decode(arrays, meta) -> APSPLoopState:
         sig = meta["plan_sig"]
         return APSPLoopState(
-            # same constructor call as the step's epilogue → identical iterate
-            d=from_numpy_coo(arrays["D_rows"].astype(np.int32),
-                             arrays["D_cols"].astype(np.int32),
-                             arrays["D_vals"].astype(np.float32), (n, n)),
+            # bitwise tile restore, re-device_put with the current shardings
+            A=_mcl._dist_from_arrays(arrays, "A", grid, (n, n), tile_a, "A"),
+            B=_mcl._dist_from_arrays(arrays, "B", grid, (n, n), tile_b, "B"),
             it=int(meta["it"]), history=list(meta["history"]),
             report=RunReport.from_dict(meta["report"]),
             caps_floor=(BatchCaps(*(int(x) for x in sig["caps"]))
@@ -557,12 +625,14 @@ def apsp_iterate_resilient(
 
     result = run_iterated(
         rc=rc, max_iters=_apsp_max_iters(n, cfg),
-        cold_start=lambda: _apsp_cold_state(a),
+        cold_start=lambda: _apsp_cold_state(a, grid),
         step_fn=step_fn, encode=encode, decode=decode,
         injector=injector, verbose=verbose,
     )
     state = result.state
-    return state.d, state.history, state.report.merged(dataclasses.replace(
+    final = distsparse.gather_to_global(state.A)
+    _mcl._TRANSFER_BYTES[0] += _mcl._dist_bytes(state.A)
+    return final, state.history, state.report.merged(dataclasses.replace(
         result.report, retries=0, sel_retries=0, replans=0, ladder_blocked=0,
         degraded_batches=(),
     ))

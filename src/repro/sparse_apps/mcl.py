@@ -56,7 +56,7 @@ from ..core import distsparse
 from ..core.batched import RunReport, batched_summa3d
 from ..core.distsparse import DistSparse, dist_spec, local_col_reduce
 from ..core.grid import COL_AX, LAYER_AX, ROW_AX, Grid
-from ..core.sparse import SparseCOO, from_numpy_coo
+from ..core.sparse import SparseCOO, from_dense_overflow, from_numpy_coo
 from ..core.summa3d import (
     BatchCaps,
     BinnedCaps,
@@ -356,6 +356,35 @@ def _mcl_prune_dense(c_tiles, grid: Grid, inflation: float, thresh: float, k: in
     return tiles, {"chaos": chaos, "nnz": nnz, "overflow": jnp.int32(0)}
 
 
+@partial(jax.jit, static_argnames=("grid", "shape", "cap"))
+def _dense_to_sparse_batch(tiles, grid: Grid, shape, cap: int):
+    """Sparsify one pruned dense batch ON the grid: per-tile
+    ``from_dense_overflow`` over the stacked (pr, pc, l, tm, wbl) tiles,
+    producing the sparse C-batch layout ``summa3d.reassemble_operands``
+    consumes. Returns ``(DistSparse kind "C", pmax-reduced overflow)`` —
+    overflow is provably 0 when ``cap >= min(k, tm) * wbl`` (the post-prune
+    per-tile hard bound)."""
+
+    def step(x):
+        t = x.reshape(x.shape[-2:])
+        s, ovf = from_dense_overflow(t, cap)
+        return (
+            s.rows[None, None, None], s.cols[None, None, None],
+            s.vals[None, None, None], s.nnz[None, None, None],
+            _pmax_grid(ovf),
+        )
+
+    spec3 = jax.sharding.PartitionSpec(ROW_AX, COL_AX, LAYER_AX)
+    spec0 = jax.sharding.PartitionSpec()
+    fn = shard_map(step, mesh=grid.mesh, in_specs=(spec3,),
+                   out_specs=(spec3,) * 4 + (spec0,), check_vma=False)
+    rows, cols, vals, nnz, ovf = fn(tiles)
+    tm, wbl = tiles.shape[-2:]
+    return DistSparse(rows=rows, cols=cols, vals=vals, nnz=nnz,
+                      shape=shape, tile_shape=(tm, wbl),
+                      grid_shape=(grid.pr, grid.pc, grid.l), kind="C"), ovf
+
+
 def _extract_dense_batch(tiles: np.ndarray, col_map: np.ndarray):
     """Vectorized host extraction of one dense batch: one ``np.nonzero``
     over the stacked tiles instead of a pr×pc×l Python tile loop."""
@@ -506,9 +535,9 @@ def mcl_iterate(
     batches become the next A/B operands via an on-grid reassembly, and only
     per-batch stat scalars (chaos, nnz) cross to the host until the final
     matrix is gathered after convergence. ``cfg.path="dense"`` runs the
-    dense-accumulator expansion with the Pallas ``col_prune`` postprocess
-    (host reassembly per iteration — the small-scale reference
-    configuration).
+    dense-accumulator expansion with the Pallas ``col_prune`` postprocess,
+    sparsified on-device and reassembled on-grid exactly like the sparse
+    path (scatter once, gather once).
 
     For long runs, `mcl_iterate_resilient` wraps the same per-iteration step
     in the checkpoint/resume harness (`runtime.resilient.run_iterated`).
@@ -673,10 +702,18 @@ def mcl_iterate_resilient(
 def _mcl_iterate_dense(
     a: SparseCOO, grid: Grid, cfg: MCLConfig, verbose: bool = False
 ) -> Tuple[SparseCOO, List[dict]]:
-    """Dense-path loop: device postprocess (col_prune kernel), vectorized
-    host extraction, host reassembly + re-scatter per iteration."""
+    """Dense-path loop, device-resident like the sparse path: the input is
+    scattered ONCE, each batch is pruned by the Pallas ``col_prune``
+    postprocess, sparsified on-device (``from_dense_overflow`` per tile),
+    and the sparse batches feed ``summa3d.reassemble_operands`` — no
+    ``gather_to_global``/``scatter_to_grid`` inside the iteration loop. The
+    final matrix is gathered once after convergence."""
     n = a.shape[0]
-    cur = a
+    tm = n // grid.pr
+    k = cfg.max_per_col
+    cap_a, cap_b, reserved = _mcl_caps(n, grid, cfg)
+    A = _scatter(a, grid, "A")
+    B = _scatter(a, grid, "B")
     history: List[dict] = []
     caps_floor = None
     sel_floor = 0
@@ -684,27 +721,32 @@ def _mcl_iterate_dense(
     for it in range(cfg.max_iters):
         t0_bytes = transfer_bytes()
         t0 = time.perf_counter()
-        A = _scatter(cur, grid, "A")
-        B = _scatter(cur, grid, "B")
-        pieces = []
+        batches: List[DistSparse] = []
         stats: List[dict] = []
 
         def postprocess(bi, c_tiles):
-            return _mcl_prune_dense(
+            tiles, st = _mcl_prune_dense(
                 c_tiles, grid=grid, inflation=cfg.inflation,
-                thresh=cfg.prune_threshold, k=cfg.max_per_col,
+                thresh=cfg.prune_threshold, k=k,
             )
+            wbl = tiles.shape[-1]
+            cap = _rup8(max(8, min(k, tm) * wbl))
+            sparse, conv_ovf = _dense_to_sparse_batch(
+                tiles, grid, (n, n), cap
+            )
+            return sparse, dict(st, overflow=st["overflow"] + conv_ovf)
 
         def consumer(bi, payload, col_map):
-            tiles, st = payload
+            sparse, st = payload
+            batches.append(sparse)
             stats.append(st)
-            pieces.append(_extract_dense_batch(_to_host(tiles), col_map))
             return None
 
         res = batched_summa3d(
             A, B, grid,
             per_process_memory=cfg.per_process_memory,
             consumer=consumer, path="dense", postprocess=postprocess,
+            reserved_bytes=reserved,
             force_num_batches=cfg.force_num_batches,
             lookahead=cfg.lookahead, r_bytes=cfg.r_bytes,
             caps_pow2=True, caps_floor=caps_floor, sel_cap_floor=sel_floor,
@@ -712,16 +754,20 @@ def _mcl_iterate_dense(
         )
         caps_floor, sel_floor = res.plan.caps, res.plan.sel_cap
         nb_floor = res.plan.num_batches
-        rows = np.concatenate([p[0] for p in pieces])
-        cols = np.concatenate([p[1] for p in pieces])
-        vals = np.concatenate([p[2] for p in pieces]).astype(np.float32)
-        cur = from_numpy_coo(rows, cols, vals, (n, n), cap=max(len(rows), 8))
+        A, B, ovf = reassemble_operands(tuple(batches), grid, cap_a, cap_b)
+        # ONE host sync per iteration, scalars only (convergence check)
         chaos = max(float(_to_host(st["chaos"])) for st in stats)
         nnz = sum(int(_to_host(st["nnz"])) for st in stats)
+        overflow = int(_to_host(ovf)) + sum(
+            int(_to_host(st["overflow"])) for st in stats
+        )
+        assert overflow == 0, f"iter {it}: dense-path overflow {overflow}"
         _record_iter(history, it, nnz, chaos, res, t0, t0_bytes, verbose)
         if chaos < cfg.converge_tol:
             break
-    return cur, history
+    final = distsparse.gather_to_global(A)
+    _TRANSFER_BYTES[0] += _dist_bytes(A)
+    return final, history
 
 
 # ---------------------------------------------------------------------------

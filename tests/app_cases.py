@@ -495,6 +495,140 @@ def case_apsp_min_plus():
     print(f"OK apsp_min_plus (iters={len(hist)}, reachable={int(fin.sum())})")
 
 
+def _counting_roundtrip(body):
+    """Run ``body`` with counting wrappers over scatter/gather; returns the
+    call counts — the shared harness of the no-host-roundtrip cases."""
+    from repro.core import distsparse
+
+    calls = {"scatter": 0, "gather": 0}
+    real_scatter = distsparse.scatter_to_grid
+    real_gather = distsparse.gather_to_global
+
+    def counting_scatter(*args, **kwargs):
+        calls["scatter"] += 1
+        return real_scatter(*args, **kwargs)
+
+    def counting_gather(*args, **kwargs):
+        calls["gather"] += 1
+        return real_gather(*args, **kwargs)
+
+    distsparse.scatter_to_grid = counting_scatter
+    distsparse.gather_to_global = counting_gather
+    try:
+        body()
+    finally:
+        distsparse.scatter_to_grid = real_scatter
+        distsparse.gather_to_global = real_gather
+    return calls
+
+
+def case_apsp_no_host_roundtrip():
+    """The APSP iterate is device-resident like MCL's: two scatters (initial
+    D as A- and B-kind) and one gather (the converged distance matrix) over
+    the whole iterated-squaring run — zero round-trips inside the loop."""
+    from repro.sparse_apps.graph_algorithms import APSPConfig, apsp_iterate
+
+    out = {}
+
+    def body():
+        grid = make_grid(2, 2, 2)
+        n = 64
+        rng = np.random.default_rng(11)
+        from repro.core.sparse import from_numpy_coo
+        w = rng.random((n, n)).astype(np.float32) * 9 + 1
+        mask = rng.random((n, n)) < 0.06
+        np.fill_diagonal(mask, False)
+        r, c = np.nonzero(mask)
+        a = from_numpy_coo(r.astype(np.int32), c.astype(np.int32),
+                           w[r, c], (n, n))
+        _, out["hist"] = apsp_iterate(
+            a, grid, APSPConfig(per_process_memory=1 << 24)
+        )
+
+    calls = _counting_roundtrip(body)
+    assert len(out["hist"]) >= 3, "need a multi-iteration run"
+    assert calls["scatter"] == 2, calls  # initial A and B only
+    assert calls["gather"] == 1, calls  # final distance matrix only
+    print(f"OK apsp_no_host_roundtrip (iters={len(out['hist'])}, "
+          f"calls={calls})")
+
+
+def case_mcl_dense_no_host_roundtrip():
+    """The MCL dense path now matches the sparse path's residency contract:
+    scatter twice before the loop, gather once after convergence — the
+    pruned dense batches are sparsified on-device and reassembled on-grid."""
+    out = {}
+
+    def body():
+        grid = make_grid(2, 2, 2)
+        n = 64
+        a = _stochastic_blocks(n, blocks=2, intra_p=0.6, seed=5)
+        _, out["hist"] = mcl_iterate(
+            a, grid,
+            MCLConfig(max_iters=6, per_process_memory=1 << 24,
+                      force_num_batches=2, path="dense", max_per_col=8),
+        )
+
+    calls = _counting_roundtrip(body)
+    assert len(out["hist"]) >= 3, "need a multi-iteration run"
+    assert calls["scatter"] == 2, calls  # initial A and B only
+    assert calls["gather"] == 1, calls  # final matrix only
+    print(f"OK mcl_dense_no_host_roundtrip (iters={len(out['hist'])}, "
+          f"calls={calls})")
+
+
+def case_serve_mixed_traffic():
+    """The serving engine at 8 devices under mixed repeat/novel traffic:
+    every request matches the dense oracle, repeat signatures hit the plan
+    cache, and the repeats cost ZERO extra fused-step retraces."""
+    from repro.core import summa3d
+    from repro.serve import MultiplyRequest, ServeConfig, SpgemmEngine
+
+    grid = make_grid(2, 2, 2)
+    n = 64
+    a0 = gen.erdos_renyi(n, 4.0, seed=40)
+    b0 = gen.erdos_renyi(n, 4.0, seed=41)
+    eng = SpgemmEngine(grid, ServeConfig(per_process_memory=1 << 24))
+
+    def dense(s):
+        m = np.zeros(s.shape, np.float64)
+        k = int(s.nnz)
+        m[np.asarray(s.rows)[:k], np.asarray(s.cols)[:k]] = (
+            np.asarray(s.vals)[:k]
+        )
+        return m
+
+    # warm the cache with the repeat signature, then measure the repeats
+    eng.submit(MultiplyRequest(rid=0, a=a0, b=b0))
+    eng.run_to_completion()
+    pairs = {0: (a0, b0)}
+    t0 = summa3d.TRACE_COUNTS["fused_step"]
+    for rid in (1, 2, 3, 4):
+        eng.submit(MultiplyRequest(rid=rid, a=a0, b=b0))
+        pairs[rid] = (a0, b0)
+    eng.run_to_completion()
+    repeat_traces = summa3d.TRACE_COUNTS["fused_step"] - t0
+    # the acceptance criterion: identical signature → zero extra retraces
+    assert repeat_traces == 0, repeat_traces
+    # interleave novel signatures (these may legitimately retrace)
+    for i, rid in enumerate((5, 6, 7, 8)):
+        an = gen.erdos_renyi(n, 4.0, seed=500 + 2 * i)
+        bn = gen.erdos_renyi(n, 4.0, seed=501 + 2 * i)
+        eng.submit(MultiplyRequest(rid=rid, a=an, b=bn))
+        pairs[rid] = (an, bn)
+    # done accumulates across run_to_completion calls: all nine requests
+    results = eng.run_to_completion()
+    assert len(results) == 9 and all(r.status == "ok" for r in results)
+    for r in results:
+        ra, rb = pairs[r.rid]
+        np.testing.assert_allclose(
+            dense(r.c), dense(ra) @ dense(rb), rtol=1e-5, atol=1e-6
+        )
+    assert eng.stats["hits"] >= 4, eng.stats  # the a0·b0 repeats all hit
+    print(f"OK serve_mixed_traffic (requests={len(results)}, "
+          f"stats={eng.stats}, extra_traces={repeat_traces})")
+
+
 CASES = {n[len("case_"):]: f for n, f in list(globals().items())
          if n.startswith("case_")}
 

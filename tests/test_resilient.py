@@ -8,6 +8,14 @@ of exceeding ``per_process_memory``, overflow storms through the injector's
 slack override, and the warm-up-fixed straggler EWMA. The 8-device
 kill-and-resume case lives in ``tests/app_cases.py`` (slow lane).
 """
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
 import numpy as np
 import pytest
 
@@ -21,6 +29,9 @@ from repro.runtime.resilient import (
     PreemptionError,
     ResilientConfig,
     SpgemmFailureInjector,
+    clear_preemption,
+    install_preemption_handler,
+    preemption_requested,
     restore_arrays_latest,
     run_iterated,
 )
@@ -323,3 +334,91 @@ class TestStragglerEwma:
             injector=inj,
         )
         assert res.report.straggler_events >= 1
+
+
+class TestSigtermTranslation:
+    """A real SIGTERM is translated into `PreemptionError` at the iteration
+    boundary (`install_preemption_handler` + `check_preemption`), so an
+    orchestrator's stop signal takes the tested restore path instead of
+    killing the process mid-write."""
+
+    def test_inprocess_sigterm_resumes_and_matches(self, tmp_path):
+        install_preemption_handler()
+        clear_preemption()
+
+        def mk_step(kill_at):
+            def step(state, it, inj):
+                if it == kill_at:
+                    os.kill(os.getpid(), signal.SIGTERM)  # handled, not fatal
+                return {"x": state["x"] * 2 + it}, None, it >= 4
+            return step
+
+        def run(path, kill_at):
+            return run_iterated(
+                rc=ResilientConfig(ckpt_dir=str(path)),
+                max_iters=6,
+                cold_start=lambda: {"x": np.ones(2, np.float64)},
+                step_fn=mk_step(kill_at),
+                encode=lambda s: (dict(s), {"v": 1}),
+                decode=lambda arrays, meta: dict(arrays),
+            )
+
+        ref = run(tmp_path / "ref", kill_at=None)
+        res = run(tmp_path / "run", kill_at=2)
+        assert ref.report.restarts == 0
+        assert res.report.restarts == 1  # the signal became a clean restore
+        assert not preemption_requested()  # translated AND cleared
+        np.testing.assert_array_equal(res.state["x"], ref.state["x"])
+
+    def test_subprocess_sigterm_drains_cleanly(self, tmp_path):
+        src = pathlib.Path(__file__).resolve().parents[1] / "src"
+        ckpt = tmp_path / "ckpt"
+        script = textwrap.dedent(f"""
+            import time
+            import numpy as np
+            from repro.runtime.resilient import (
+                ResilientConfig, install_preemption_handler, run_iterated,
+            )
+            install_preemption_handler()
+
+            def step(state, it, inj):
+                time.sleep(0.3)
+                return {{"x": state["x"] * 2 + it}}, None, it >= 5
+
+            res = run_iterated(
+                rc=ResilientConfig(ckpt_dir={str(ckpt)!r}, async_save=False),
+                max_iters=6,
+                cold_start=lambda: {{"x": np.ones(2, np.float64)}},
+                step_fn=step,
+                encode=lambda s: (dict(s), {{"v": 1}}),
+                decode=lambda arrays, meta: dict(arrays),
+            )
+            print("RESTARTS", res.report.restarts,
+                  "X", float(res.state["x"][0]))
+        """)
+        env = dict(os.environ, PYTHONPATH=str(src), JAX_PLATFORMS="cpu")
+        proc = subprocess.Popen(
+            [sys.executable, "-c", script], env=env, text=True,
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+        )
+        try:
+            deadline = time.time() + 120
+            while time.time() < deadline:
+                if ckpt.exists() and any(ckpt.iterdir()):
+                    break
+                assert proc.poll() is None, proc.communicate()
+                time.sleep(0.05)
+            else:
+                pytest.fail("child never wrote a checkpoint")
+            proc.send_signal(signal.SIGTERM)  # a REAL kill from outside
+            out, err = proc.communicate(timeout=180)
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+        assert proc.returncode == 0, (out, err)
+        line = [ln for ln in out.splitlines() if ln.startswith("RESTARTS")]
+        assert line, (out, err)
+        _, restarts, _, x = line[0].split()
+        assert int(restarts) >= 1  # SIGTERM took the restore path
+        # trajectory parity: x_{k+1} = 2 x_k + k from 1 → 121 after 6 iters
+        assert float(x) == 121.0

@@ -1,0 +1,183 @@
+"""Fast-lane tests for the plan-cached SpGEMM serving engine.
+
+Single-device grid: admission control (refusal / deferral under the
+``per_process_memory`` budget), plan-cache behavior (repeat traffic reuses
+the fused-step executable — zero retraces, asserted via
+``summa3d.TRACE_COUNTS``), FIFO ordering, per-request ``RunReport``
+accounting, and numeric parity against a dense oracle (plus_times and
+min_plus). The 8-device mixed-traffic smoke lives in ``tests/app_cases.py``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import semiring as sr
+from repro.core import summa3d
+from repro.core.gen import erdos_renyi
+from repro.core.grid import make_grid
+from repro.serve import (
+    MultiplyRequest,
+    ServeConfig,
+    SpgemmEngine,
+    matrix_signature,
+)
+
+
+@pytest.fixture(scope="module")
+def grid1():
+    return make_grid(1, 1, 1)
+
+
+def _dense(s, fill=0.0):
+    m = np.full(s.shape, fill, np.float64)
+    nnz = int(s.nnz)
+    m[np.asarray(s.rows)[:nnz], np.asarray(s.cols)[:nnz]] = (
+        np.asarray(s.vals)[:nnz]
+    )
+    return m
+
+
+def _pair(n=64, deg=4.0, seed=0):
+    return (erdos_renyi(n, deg, seed=seed),
+            erdos_renyi(n, deg, seed=seed + 1))
+
+
+class TestCorrectness:
+    def test_matches_dense_plus_times(self, grid1):
+        a, b = _pair(seed=10)
+        eng = SpgemmEngine(grid1, ServeConfig(per_process_memory=1 << 24))
+        eng.submit(MultiplyRequest(rid=0, a=a, b=b))
+        (res,) = eng.run_to_completion()
+        assert res.status == "ok"
+        np.testing.assert_allclose(
+            _dense(res.c), _dense(a) @ _dense(b), rtol=1e-5, atol=1e-6
+        )
+
+    def test_matches_dense_min_plus(self, grid1):
+        a, b = _pair(seed=20)
+        eng = SpgemmEngine(grid1, ServeConfig(per_process_memory=1 << 24))
+        eng.submit(MultiplyRequest(rid=0, a=a, b=b, semiring=sr.MIN_PLUS))
+        (res,) = eng.run_to_completion()
+        da, db = _dense(a, np.inf), _dense(b, np.inf)
+        want = np.min(da[:, :, None] + db[None, :, :], axis=1)
+        got = _dense(res.c, np.inf)
+        # structural zeros are +inf in both renderings
+        np.testing.assert_allclose(
+            np.where(np.isfinite(want), want, 0),
+            np.where(np.isfinite(got), got, 0), rtol=1e-5,
+        )
+        assert (np.isfinite(want) == np.isfinite(got)).all()
+
+
+class TestPlanCache:
+    def test_repeat_request_zero_retrace(self, grid1):
+        a, b = _pair(seed=30)
+        eng = SpgemmEngine(grid1, ServeConfig(per_process_memory=1 << 24))
+        eng.submit(MultiplyRequest(rid=0, a=a, b=b))
+        eng.run_to_completion()
+        assert eng.stats == {**eng.stats, "hits": 0, "misses": 1}
+        t0 = summa3d.TRACE_COUNTS["fused_step"]
+        eng.submit(MultiplyRequest(rid=1, a=a, b=b))
+        results = eng.run_to_completion()
+        assert summa3d.TRACE_COUNTS["fused_step"] - t0 == 0
+        repeat = [r for r in results if r.rid == 1][0]
+        assert repeat.plan_cached
+        assert eng.stats["hits"] == 1 and eng.cache_hit_rate() == 0.5
+
+    def test_signature_stability(self, grid1):
+        cfg = ServeConfig()
+        a, b = _pair(seed=40)
+        r1 = MultiplyRequest(rid=0, a=a, b=b)
+        r2 = MultiplyRequest(rid=1, a=a, b=b)
+        assert (matrix_signature(r1, grid1, cfg)
+                == matrix_signature(r2, grid1, cfg))
+        c, d = _pair(n=32, seed=41)
+        r3 = MultiplyRequest(rid=2, a=c, b=d)
+        assert (matrix_signature(r1, grid1, cfg)
+                != matrix_signature(r3, grid1, cfg))
+
+    def test_concurrent_same_signature_hits(self, grid1):
+        # the entry is written at plan time, so the second identical request
+        # hits even though the first has not completed yet
+        a, b = _pair(seed=50)
+        eng = SpgemmEngine(grid1, ServeConfig(per_process_memory=1 << 24))
+        eng.submit(MultiplyRequest(rid=0, a=a, b=b))
+        eng.submit(MultiplyRequest(rid=1, a=a, b=b))
+        results = eng.run_to_completion()
+        assert [r.status for r in results] == ["ok", "ok"]
+        assert eng.stats["hits"] == 1 and eng.stats["misses"] == 1
+
+
+class TestAdmission:
+    def test_refusal_at_budget(self, grid1):
+        a, b = _pair(seed=60)
+        # budget below the operands' own footprint: no split can fit it
+        eng = SpgemmEngine(grid1, ServeConfig(per_process_memory=1024))
+        eng.submit(MultiplyRequest(rid=0, a=a, b=b))
+        (res,) = eng.run_to_completion()
+        assert res.status == "refused" and res.c is None
+        assert res.reason != ""
+        assert eng.stats["refused"] == 1 and eng.stats["served"] == 0
+
+    def test_deferred_fifo_ordering(self, grid1):
+        a, b = _pair(seed=70)
+        # probe one request's price, then set a budget that fits exactly one
+        probe = SpgemmEngine(grid1, ServeConfig(per_process_memory=1 << 24))
+        probe.submit(MultiplyRequest(rid=0, a=a, b=b))
+        (p,) = probe.run_to_completion()
+        budget = int(p.price_bytes * 1.5)
+        eng = SpgemmEngine(grid1, ServeConfig(per_process_memory=budget))
+        for rid in range(3):
+            eng.submit(MultiplyRequest(rid=rid, a=a, b=b))
+        results = eng.run_to_completion()
+        assert [r.rid for r in results] == [0, 1, 2]  # FIFO, no overtaking
+        assert all(r.status == "ok" for r in results)
+        assert eng.stats["deferred"] >= 1
+        assert results[1].was_deferred
+
+    def test_budget_forces_batching(self, grid1):
+        a, b = _pair(n=96, deg=8.0, seed=80)
+        roomy = SpgemmEngine(grid1, ServeConfig(per_process_memory=1 << 24))
+        roomy.submit(MultiplyRequest(rid=0, a=a, b=b))
+        (r0,) = roomy.run_to_completion()
+        tight = SpgemmEngine(
+            grid1, ServeConfig(per_process_memory=int(r0.price_bytes * 0.7))
+        )
+        tight.submit(MultiplyRequest(rid=0, a=a, b=b))
+        (r1,) = tight.run_to_completion()
+        assert r1.status == "ok"
+        assert r1.num_batches > r0.num_batches or r1.splits > 0
+        np.testing.assert_allclose(
+            _dense(r1.c), _dense(r0.c), rtol=1e-5, atol=1e-6
+        )
+
+
+class TestAccounting:
+    def test_run_report_and_result_fields(self, grid1):
+        a, b = _pair(seed=90)
+        eng = SpgemmEngine(grid1, ServeConfig(per_process_memory=1 << 24))
+        eng.submit(MultiplyRequest(rid=7, a=a, b=b))
+        (res,) = eng.run_to_completion()
+        assert res.rid == 7 and res.status == "ok"
+        assert res.price_bytes > 0 and res.num_batches >= 1
+        assert res.latency_ms > 0
+        assert res.report.retries == 0 and res.report.sel_retries == 0
+        assert res.report.to_dict()["retries"] == 0  # JSON round-trip intact
+        assert eng.stats["served"] == 1
+        assert eng.stats["hits"] + eng.stats["misses"] == 1
+
+    def test_mixed_traffic_stats(self, grid1):
+        rng = np.random.default_rng(0)
+        eng = SpgemmEngine(grid1, ServeConfig(per_process_memory=1 << 24))
+        a0, b0 = _pair(seed=100)
+        for rid in range(6):
+            if rid % 2 == 0:
+                eng.submit(MultiplyRequest(rid=rid, a=a0, b=b0))
+            else:
+                n = int(rng.integers(32, 48)) * 2
+                a, b = _pair(n=n, deg=4.0, seed=200 + rid)
+                eng.submit(MultiplyRequest(rid=rid, a=a, b=b))
+        results = eng.run_to_completion()
+        assert len(results) == 6
+        assert eng.stats["served"] == 6
+        assert eng.stats["hits"] >= 2  # the three repeats of (a0, b0)
+        assert 0.0 < eng.cache_hit_rate() < 1.0
