@@ -29,6 +29,7 @@ from repro.core import gen
 from repro.core.batched import plan_batches, probe_memory_budget
 from repro.core.distsparse import scatter_to_grid
 from repro.core.grid import make_grid
+from repro.core.specs import PlanSpec
 from repro.sparse_apps import graph_algorithms as ga
 from repro.sparse_apps.mcl import reset_transfer_bytes, transfer_bytes
 
@@ -70,8 +71,10 @@ def run_graph_suite(scale: int = 7, edge_factor: int = 8) -> list:
     B_d = scatter_to_grid(U, grid, "B")
     M_d = scatter_to_grid(L, grid, "C")
     ppm = probe_memory_budget(A_d, B_d, grid)
-    pu = plan_batches(A_d, B_d, grid, per_process_memory=ppm)
-    pm = plan_batches(A_d, B_d, grid, per_process_memory=ppm, mask=M_d)
+    pu = plan_batches(A_d, B_d, grid, per_process_memory=ppm,
+                      spec=PlanSpec(local_path="esc"))
+    pm = plan_batches(A_d, B_d, grid, per_process_memory=ppm,
+                      spec=PlanSpec(mask=M_d, local_path="esc"))
     rows.append(dict(_plan_row("triangle_unmasked", pu), n=n,
                      per_process_memory=ppm))
     rows.append(dict(_plan_row("triangle_masked", pm), n=n,

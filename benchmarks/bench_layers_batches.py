@@ -13,6 +13,7 @@ from repro.core import gen
 from repro.core.batched import batched_summa3d
 from repro.core.distsparse import scatter_to_grid
 from repro.core.grid import make_grid
+from repro.core.specs import PlanSpec
 
 from .common import emit
 
@@ -38,7 +39,7 @@ def run(n: int = 64, nnz_per_row: int = 5) -> None:
             t0 = time.perf_counter()
             res = batched_summa3d(
                 A, B, grid, per_process_memory=1 << 30, consumer=consumer,
-                path="sparse", force_num_batches=nb,
+                path="sparse", spec=PlanSpec(force_num_batches=nb),
             )
             dt = (time.perf_counter() - t0) * 1e6
             emit(

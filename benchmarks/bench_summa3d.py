@@ -35,6 +35,7 @@ from repro.core.batched import (
 )
 from repro.core.distsparse import scatter_to_grid
 from repro.core.grid import make_grid
+from repro.core.specs import ExecSpec, PlanSpec
 
 from .common import emit
 
@@ -78,8 +79,9 @@ def _run_once(A, B, grid, nb, pipelined, binned, local_path="auto"):
     state["t_last"] = t0
     res = batched_summa3d(
         A, B, grid, per_process_memory=1 << 30, consumer=consumer,
-        path="sparse", force_num_batches=nb, pipelined=pipelined,
-        binned=binned, local_path=local_path,
+        path="sparse",
+        spec=PlanSpec(local_path=local_path, force_num_batches=nb),
+        exec_spec=ExecSpec(pipelined=pipelined, binned=binned),
     )
     dt = (time.perf_counter() - t0) * 1e3
     return dt, state["batch_ms"], res
@@ -119,7 +121,7 @@ def run_summa3d_suite(scale=8, edge_factor=8, nb=32, iters=5) -> list:
     rows = []
 
     plan = plan_batches(A, B, grid, per_process_memory=1 << 30,
-                        force_num_batches=nb)
+                        spec=PlanSpec(force_num_batches=nb, local_path="esc"))
     reduction = plan.kbin.pairings_unbinned / max(plan.kbin.pairings, 1)
     rows.append(dict(
         op="plan", variant="kbin", wall_ms=0.0, n=n,
@@ -142,9 +144,9 @@ def run_summa3d_suite(scale=8, edge_factor=8, nb=32, iters=5) -> list:
     Bh = scatter_to_grid(ah.transpose().sort_rowmajor(), grid, "B")
     ppm = probe_memory_budget(Ah, Bh, grid)
     p_esc = plan_batches(Ah, Bh, grid, per_process_memory=ppm,
-                         local_path="esc")
+                         spec=PlanSpec(local_path="esc"))
     p_hash = plan_batches(Ah, Bh, grid, per_process_memory=ppm,
-                          local_path="hash")
+                          spec=PlanSpec(local_path="hash"))
     rows.append(dict(
         op="plan", variant="fixed_mem_batches", wall_ms=0.0, n=n,
         edge_factor=2 * edge_factor,

@@ -59,6 +59,21 @@ SUITE_ROWS = {
             "overhead_ms_per_iter", "bytes_per_save", "checkpoint_stalls",
         ),
     },
+    "tune": {
+        # one calibration row per pipelined summa3d variant; the summaries
+        # carry the two autotuner acceptance criteria
+        ("model", "pipelined"): ("ratio", "within_band"),
+        ("model", "pipelined_esc"): ("ratio", "within_band"),
+        ("model", "pipelined_binned"): ("ratio", "within_band"),
+        ("model", "pipelined_hash"): ("ratio", "within_band"),
+        ("summary", "model_acceptance"): ("overhead", "all_within_band"),
+        ("autotune", "skew"): (
+            "never_worse", "cheaper_comm_bytes", "cheaper_batches",
+        ),
+        ("summary", "autotune_acceptance"): (
+            "never_worse_all", "skew_cheaper",
+        ),
+    },
     "serve_engine": {
         ("serve_e2e", "open_loop"): (
             "p50_ms", "p99_ms", "multiplies_per_s", "requests",

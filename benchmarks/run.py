@@ -25,9 +25,13 @@ R-MAT, on-grid vs host-filtered overlap detection) and writes
 ``BENCH_graph.json``. ``--suite serve`` runs the plan-cached serving-engine
 suite (open-loop mixed repeat/novel traffic: p50/p99 latency,
 multiplies/sec, plan-cache hit rate, zero-retrace repeat probe) and writes
-``BENCH_serve.json``; ``--smoke`` shrinks it to CI size. Every BENCH_*.json
-artifact validates against the shared row schema via
-``python -m benchmarks.check_bench_json`` (enforced in CI).
+``BENCH_serve.json``; ``--smoke`` shrinks it to CI size. ``--suite tune``
+runs the cost-model calibration + autotuner acceptance suite (predicted /
+measured ratio per checked-in summa3d pipelined row, never-worse-than-default
+and R-MAT-skew autotuner rows — pure host math) and writes
+``BENCH_tune.json``. Every BENCH_*.json artifact validates against the
+shared row schema via ``python -m benchmarks.check_bench_json`` (enforced
+in CI).
 """
 import argparse
 import json
@@ -118,6 +122,16 @@ def run_graph(json_path: pathlib.Path) -> None:
     _write_suite("graph_masked", bench_graph.run_graph_suite, json_path)
 
 
+def run_tune(json_path: pathlib.Path, smoke: bool = False) -> None:
+    from . import bench_tune
+
+    _write_suite(
+        "tune",
+        lambda: bench_tune.run_tune_suite(smoke=smoke),
+        json_path,
+    )
+
+
 def run_serve(json_path: pathlib.Path, smoke: bool = False) -> None:
     from . import bench_serve
 
@@ -132,7 +146,7 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
         "--suite",
-        choices=("all", "local", "summa3d", "mcl", "graph", "serve"),
+        choices=("all", "local", "summa3d", "mcl", "graph", "serve", "tune"),
         default="all",
     )
     ap.add_argument(
@@ -162,6 +176,10 @@ def main() -> None:
     elif args.suite == "serve":
         run_serve(pathlib.Path(
             args.json_out or REPO_ROOT / "BENCH_serve.json"
+        ), smoke=args.smoke)
+    elif args.suite == "tune":
+        run_tune(pathlib.Path(
+            args.json_out or REPO_ROOT / "BENCH_tune.json"
         ), smoke=args.smoke)
     else:
         run_all()

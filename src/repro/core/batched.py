@@ -68,10 +68,12 @@ from .summa3d import (
     summa3d_sparse_step,
 )
 from .sparse import hstack_remap
+from .specs import ExecSpec, PlanFloors, PlanSpec, resolve_specs
 from .symbolic import (
     HASH_LOAD_FACTOR,
     HASH_SLOT_BYTES,
     KBinPlan,
+    SymbolicCounts,
     batch_count,
     batch_count_lower_bound,
     batching_plan_columns,
@@ -113,26 +115,6 @@ Array = jnp.ndarray
 # ---------------------------------------------------------------------------
 # Distributed symbolic step (Alg. 3)
 # ---------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class SymbolicCounts:
-    """Host-side output of the distributed symbolic pass (all numpy).
-
-    Only count *vectors* ever travel (§IV-A, Fig. 8) — the same payload now
-    also carries what the numeric pass needs to size selection buffers and
-    the k-bin plan, so no extra communication round is spent on either.
-    ``mask_colcounts`` (masked multiplies only) holds the mask's exact
-    per-(tile, local column) entry counts — the §V-B observation that a
-    strict mask bounds C's structure, so the batch plan can budget survivors
-    instead of the full product.
-    """
-
-    percol: np.ndarray  # (pr, pc, l, tn_b) flops per local output column
-    b_colcounts: np.ndarray  # (pr, pc, l, tn_b) B entries per local column
-    a_kcounts: np.ndarray  # (pr, l, k_tot) per-k counts of gathered A
-    b_kcounts: np.ndarray  # (pc, l, k_tot) per-k counts of gathered B
-    mask_colcounts: Optional[np.ndarray] = None  # (pr, pc, l, wl) mask nnz
-
-
 @partial(jax.jit, static_argnames=("grid",))
 def _symbolic3d_jit(
     a: DistSparse, b: DistSparse, mask: Optional[DistSparse], grid: Grid
@@ -311,34 +293,33 @@ def plan_batches(
     b: DistSparse,
     grid: Grid,
     per_process_memory: int,
-    r_bytes: int = 12,
-    slack: float = 1.3,
-    force_num_batches: Optional[int] = None,
-    reserved_bytes: int = 0,
-    mask: Optional[DistSparse] = None,
-    mask_complement: bool = False,
-    caps_pow2: bool = False,
-    caps_floor: Optional[BatchCaps] = None,
-    sel_cap_floor: int = 0,
-    num_batches_floor: int = 0,
-    kbin_candidates: Optional[Tuple[int, ...]] = None,
-    local_path: str = "esc",
-    hash_caps_floor: Optional[HashCaps] = None,
+    spec: Optional[PlanSpec] = None,
+    floors: Optional[PlanFloors] = None,
+    **legacy,
 ) -> BatchPlan:
     """Run the symbolic step and derive b + static capacities (host math).
 
-    ``local_path`` drives the 3-way local-multiply decision recorded on the
-    plan: "esc" and "binned" keep the classic O(flops)-scratch budget;
+    The planning policy lives on ``spec`` (`PlanSpec`) and the cross-plan
+    capacity pins on ``floors`` (`PlanFloors`); the old keyword surface
+    (``r_bytes=``, ``slack=``, ``caps_floor=``, …) is still accepted for one
+    release and mapped onto the specs with a ``DeprecationWarning``. A bare
+    call (no spec) keeps the historical ``local_path="esc"`` default; a
+    passed spec uses its own default ("auto" — the driver's semantics).
+
+    ``spec.local_path`` drives the 3-way local-multiply decision recorded on
+    the plan: "esc" and "binned" keep the classic O(flops)-scratch budget;
     "hash" budgets the hash-accumulator path at O(nnz_out·load_factor)
     resident bytes instead of O(flops) — high compression-factor multiplies
     then need strictly fewer batches at the same ``per_process_memory``;
     "auto" picks "hash" when the estimated compression factor clears
     ``HASH_CF_THRESHOLD`` (the binned-vs-ESC refinement stays with the
-    driver, which knows the semiring). ``hash_caps_floor`` floors the
+    driver, which knows the semiring). ``floors.hash_caps`` floors the
     derived ``HashCaps`` elementwise (iterated-multiply jit-cache
-    stability, like ``caps_floor``).
+    stability, like ``floors.caps``); ``floors.kbin_caps`` additionally pins
+    the k-bin candidate list to its bin count when the spec leaves
+    ``kbin_candidates`` unset.
 
-    ``reserved_bytes`` is subtracted from the per-process budget before the
+    ``spec.reserved_bytes`` is subtracted from the per-process budget before the
     Alg. 3 batch count: memory the caller has already committed per process
     to the CONSUMED outputs (e.g. the pruned batches a memory-constrained MCL
     iteration keeps on-device for the next iterate, §V-C) — so the budget
@@ -368,22 +349,119 @@ def plan_batches(
     the masked path's true high-water mark; gating the expansion itself is
     the ROADMAP follow-up that removes it.
 
-    ``caps_pow2`` rounds every derived capacity up to the next power of two
-    and ``caps_floor``/``sel_cap_floor`` take an elementwise max with a
-    previous plan's capacities — together they keep the fused step's static
-    signature stable across the iterations of an iterated multiply (MCL),
-    so per-iteration cap drift hits the jit cache instead of recompiling.
+    ``floors.caps_pow2`` rounds every derived capacity up to the next power
+    of two and ``floors.caps``/``floors.sel_cap`` take an elementwise max
+    with a previous plan's capacities — together they keep the fused step's
+    static signature stable across the iterations of an iterated multiply
+    (MCL), so per-iteration cap drift hits the jit cache instead of
+    recompiling.
     """
+    spec, floors, _ = resolve_specs(
+        spec, floors, None, legacy, default_local_path="esc",
+        where="plan_batches", allow_exec=False,
+    )
+    counts = symbolic3d_counts(a, b, grid, mask=spec.mask)
+    inputs = PlanInputs(
+        tm_a=a.tile_shape[0],
+        max_nnz_a=int(np.asarray(a.nnz).max()),
+        max_nnz_b=int(np.asarray(b.nnz).max()),
+        nnz_a=int(np.asarray(a.nnz).sum()),
+        nnz_b=int(np.asarray(b.nnz).sum()),
+        cap_a=a.cap,
+        cap_b=b.cap,
+        p=grid.p,
+        cap_mask=spec.mask.cap if spec.mask is not None else None,
+    )
+    return plan_from_symbolic(counts, inputs, per_process_memory, spec, floors)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanInputs:
+    """Scalar operand facts ``plan_from_symbolic`` needs besides the count
+    vectors — constructible from scattered operands (``plan_batches``) or
+    from host COO + a candidate grid shape (``PlanInputs.from_host``, the
+    autotuner's no-device oracle path)."""
+
+    tm_a: int  # A/C tile rows (m // pr)
+    max_nnz_a: int  # max per-tile nnz of scattered A
+    max_nnz_b: int
+    nnz_a: int  # global nnz(A)
+    nnz_b: int
+    cap_a: int  # static per-tile capacity of scattered A
+    cap_b: int
+    p: int  # process count pr*pc*l
+    cap_mask: Optional[int] = None
+
+    @classmethod
+    def from_host(cls, a, b, grid_shape: Tuple[int, int, int],
+                  mask=None, cap_slack: float = 1.3, min_cap: int = 8,
+                  ) -> "PlanInputs":
+        """Build the scalar facts for a CANDIDATE grid from host COO —
+        per-tile nnz maxima via the layout math (no scatter), static
+        capacities via ``scatter_to_grid``'s default sizing rule, so the
+        oracle plan matches what a default scatter would produce."""
+        from .symbolic import host_tile_counts
+
+        def _cap(counts):
+            return max(int(np.ceil(counts.max() * cap_slack)), min_cap)
+
+        ca = host_tile_counts(a, grid_shape, "A")
+        cb = host_tile_counts(b, grid_shape, "B")
+        pr, pc, l = grid_shape
+        return cls(
+            tm_a=a.shape[0] // pr,
+            max_nnz_a=int(ca.max()),
+            max_nnz_b=int(cb.max()),
+            nnz_a=int(a.nnz),
+            nnz_b=int(b.nnz),
+            cap_a=_cap(ca),
+            cap_b=_cap(cb),
+            p=pr * pc * l,
+            cap_mask=(
+                _cap(host_tile_counts(mask, grid_shape, "C"))
+                if mask is not None else None
+            ),
+        )
+
+
+def plan_from_symbolic(
+    counts: SymbolicCounts,
+    inputs: PlanInputs,
+    per_process_memory: int,
+    spec: PlanSpec,
+    floors: PlanFloors,
+) -> BatchPlan:
+    """Pure host planning math — ``plan_batches`` minus the device pass.
+
+    Everything downstream of the symbolic counts is numpy over count
+    vectors, so the SAME function plans a real multiply (counts from the
+    distributed pass) and prices a hypothetical one (counts from
+    ``symbolic.host_symbolic_counts`` for a candidate grid the operands were
+    never scattered to) — which is what lets ``repro.tune`` enumerate grids
+    without touching a device.
+    """
+    r_bytes, slack = spec.r_bytes, spec.slack
+    force_num_batches = spec.force_num_batches
+    reserved_bytes = spec.reserved_bytes
+    mask_complement = spec.mask_complement
+    local_path = spec.local_path
+    caps_pow2, caps_floor = floors.caps_pow2, floors.caps
+    sel_cap_floor, num_batches_floor = floors.sel_cap, floors.num_batches
+    hash_caps_floor = floors.hash_caps
+    kbin_candidates = spec.kbin_candidates
+    if kbin_candidates is None and floors.kbin_caps is not None:
+        # a pinned-bin-count floor implies the candidate pin the old API
+        # made every iterated caller thread separately
+        kbin_candidates = (floors.kbin_caps.num_bins,)
     if reserved_bytes >= per_process_memory:
         raise MemoryError(
             f"reserved output bytes ({reserved_bytes}) exceed per-process "
             f"memory ({per_process_memory})"
         )
     per_process_memory = per_process_memory - reserved_bytes
-    counts = symbolic3d_counts(a, b, grid, mask=mask)
     percol = counts.percol  # (pr, pc, l, tn_b)
     pr, pc, l, tn_b = percol.shape
-    masked = mask is not None and not mask_complement
+    masked = counts.mask_colcounts is not None and not mask_complement
     if masked:
         # mcount[i, j, c]: mask entries of (row block i, col block j) at
         # block-local column c — the (l, wl) mask tiles laid out layer-major
@@ -398,13 +476,13 @@ def plan_batches(
     per_process_flops = percol.sum(axis=-1)  # (pr, pc, l)
     max_unmerged = int(unmerged_percol.sum(axis=-1).max())
     total_flops = int(per_process_flops.sum())
-    max_nnz_a = int(np.asarray(a.nnz).max())
-    max_nnz_b = int(np.asarray(b.nnz).max())
+    max_nnz_a = inputs.max_nnz_a
+    max_nnz_b = inputs.max_nnz_b
 
     # hash-path resident bound (O(output)): the table holds MERGED
     # survivors, and a D-tile column cannot exceed tm_a distinct rows
     assert local_path in ("auto", "esc", "binned", "hash"), local_path
-    tm_a = a.tile_shape[0]
+    tm_a = inputs.tm_a
     max_hash_nnz = int(np.minimum(merged_d_percol, tm_a).sum(axis=-1).max())
     compression_est = max_unmerged / max(max_hash_nnz, 1)
     budget_hash = local_path == "hash" or (
@@ -465,25 +543,25 @@ def plan_batches(
     # symbolic B-column counts, so the first batch can never trigger a
     # spurious selection retry on skewed inputs.
     sel_per_batch = fold_block_cyclic(counts.b_colcounts, nb, l).sum(axis=-1)
-    sel_cap = min(_rup8(max(int(sel_per_batch.max()), 8)), b.cap)
+    sel_cap = min(_rup8(max(int(sel_per_batch.max()), 8)), inputs.cap_b)
 
     # exact per-batch mask-slice capacity: batch bi selects the contiguous
     # local columns [bi·wbl, (bi+1)·wbl) of every mask tile.
     mask_sel_cap = 0
-    if mask is not None:
+    if counts.mask_colcounts is not None:
         wbl = tn_b // (nb * l)
         per_batch_mask = counts.mask_colcounts.reshape(
             pr, pc, l, nb, wbl
         ).sum(axis=-1)
         mask_sel_cap = min(
-            _rup8(max(int(per_batch_mask.max()), 8)), mask.cap
+            _rup8(max(int(per_batch_mask.max()), 8)), inputs.cap_mask
         )
 
     if caps_pow2:
         caps = BatchCaps(*(_rup_pow2(x) for x in dataclasses.astuple(caps)))
-        sel_cap = min(_rup_pow2(sel_cap), b.cap)
-        if mask is not None:
-            mask_sel_cap = min(_rup_pow2(mask_sel_cap), mask.cap)
+        sel_cap = min(_rup_pow2(sel_cap), inputs.cap_b)
+        if counts.mask_colcounts is not None:
+            mask_sel_cap = min(_rup_pow2(mask_sel_cap), inputs.cap_mask)
     if caps_floor is not None:
         caps = BatchCaps(*(
             max(x, y) for x, y in zip(
@@ -503,18 +581,17 @@ def plan_batches(
     kbin = plan_k_bins(
         counts.a_kcounts.max(axis=(0, 1)),
         counts.b_kcounts.max(axis=(0, 1)),
-        pc * a.cap,
+        pc * inputs.cap_a,
         pr * sel_cap,
         **kbin_kwargs,
     )
 
     # Eq. (2) lower bound (global memory form) for reporting/validation
-    nnz_a = int(np.asarray(a.nnz).sum())
-    nnz_b = int(np.asarray(b.nnz).sum())
     mem_c = r_bytes * int(per_process_flops.sum())
     try:
         lb = batch_count_lower_bound(
-            mem_c, per_process_memory * grid.p, nnz_a, nnz_b, r=r_bytes
+            mem_c, per_process_memory * inputs.p,
+            inputs.nnz_a, inputs.nnz_b, r=r_bytes,
         )
     except MemoryError:
         lb = -1
@@ -581,7 +658,7 @@ def probe_memory_budget(
     symbolic probe is jit-cached — replanning is cheap).
     """
     probe = plan_batches(a, b, grid, per_process_memory=1 << 30,
-                         r_bytes=r_bytes)
+                         spec=PlanSpec(local_path="esc", r_bytes=r_bytes))
     inputs = r_bytes * (
         int(np.asarray(a.nnz).max()) + int(np.asarray(b.nnz).max())
     )
@@ -757,6 +834,20 @@ class BatchedResult:
     hash_caps: Optional[HashCaps] = None  # the static HashCaps used (hash)
     report: RunReport = dataclasses.field(default_factory=RunReport)
 
+    def floors(self) -> PlanFloors:
+        """The capacities this run actually used, as a `PlanFloors` an
+        iterated caller merges into its next plan — ONE field replaces the
+        old caps/sel/nb/kbin/hash attribute quintet (pow2 quantization on,
+        since that is the whole point of pinning)."""
+        return PlanFloors(
+            caps=self.plan.caps,
+            sel_cap=self.plan.sel_cap,
+            num_batches=self.plan.num_batches,
+            kbin_caps=self.binned_caps,
+            hash_caps=self.hash_caps,
+            caps_pow2=True,
+        )
+
 
 def batched_summa3d(
     a: DistSparse,
@@ -766,43 +857,36 @@ def batched_summa3d(
     consumer: Callable[[int, object, np.ndarray], object],
     path: str = "sparse",
     semiring: sr.Semiring = sr.PLUS_TIMES,
-    r_bytes: int = 12,
-    slack: float = 1.3,
-    max_retries: int = 4,
-    force_num_batches: Optional[int] = None,
-    sorted_merge: bool = True,
-    pipelined: bool = True,
-    lookahead: int = 2,
-    binned: object = "auto",
+    spec: Optional[PlanSpec] = None,
+    floors: Optional[PlanFloors] = None,
+    exec_spec: Optional[ExecSpec] = None,
     postprocess: Optional[Callable[[int, object], object]] = None,
-    reserved_bytes: int = 0,
-    mask: Optional[DistSparse] = None,
-    mask_complement: bool = False,
-    caps_pow2: bool = False,
-    caps_floor: Optional[BatchCaps] = None,
-    sel_cap_floor: int = 0,
-    num_batches_floor: int = 0,
-    kbin_candidates: Optional[Tuple[int, ...]] = None,
-    kbin_caps_floor: Optional[BinnedCaps] = None,
-    local_path: str = "auto",
-    hash_caps_floor: Optional[HashCaps] = None,
-    degrade: bool = True,
+    **legacy,
 ) -> BatchedResult:
     """Multiply A·B in batches; the consumer sees each batch then it's freed.
 
+    The knob surface is three frozen specs: ``spec`` (`PlanSpec` — mask,
+    local path, slack, reserved bytes, k-bin candidates), ``floors``
+    (`PlanFloors` — cross-iteration capacity pins, fold a previous run's
+    ``BatchedResult.floors()`` in via ``merged()``), and ``exec_spec``
+    (`ExecSpec` — pipelined schedule, lookahead, retry budget, degradation).
+    The old keyword surface (``slack=``, ``lookahead=``, ``caps_floor=``, …)
+    is accepted for one release and mapped onto the specs with a
+    ``DeprecationWarning``.
+
     consumer(batch_idx, c_batch, global_col_map) -> anything; c_batch is a
     DistSparse (path="sparse") or stacked dense tiles (path="dense").
-    ``sorted_merge`` selects the segmented (merge-not-sort) Merge-Fiber in
-    the per-batch sparse step.
+    ``exec_spec.sorted_merge`` selects the segmented (merge-not-sort)
+    Merge-Fiber in the per-batch sparse step.
 
-    ``mask`` runs the masked/filtered SpGEMM (§V-B): a C-layout
+    ``spec.mask`` runs the masked/filtered SpGEMM (§V-B): a C-layout
     ``DistSparse`` whose structure gates the output — consumers receive
     C ⊙ M (or C ⊙ ¬M under ``mask_complement=True``). The mask stays
     device-resident: the plan budgets only surviving entries (strict mode),
     and each batch's mask slice is selected + fiber-gathered inside the
-    fused step. ``caps_pow2``/``caps_floor``/``sel_cap_floor`` quantize and
-    floor the planned capacities (see ``plan_batches``) so iterated callers
-    reuse one fused-step executable across iterations.
+    fused step. ``floors`` quantizes (``caps_pow2``) and floors the planned
+    capacities (see ``plan_batches``) so iterated callers reuse one
+    fused-step executable across iterations.
 
     ``postprocess(batch_idx, c_batch) -> c_batch'`` is the DEVICE-side
     per-batch hook (HipMCL integration, §V-C): a jitted transform applied to
@@ -813,36 +897,37 @@ def batched_summa3d(
     batch is ever offered to the host. The consumer then receives the hook's
     return value (which may be any pytree, e.g. ``(pruned, stats)``) in place
     of the raw batch. On an overflow retry the hook re-runs on the retried
-    product. ``reserved_bytes`` flows into ``plan_batches``: per-process
-    memory already committed to the consumed outputs.
+    product. ``spec.reserved_bytes`` flows into ``plan_batches``:
+    per-process memory already committed to the consumed outputs.
 
-    ``pipelined=True`` (default) runs the Alg. 4 loop as a lookahead window:
-    batch i+1..i+lookahead are dispatched before batch i's device-resident
-    overflow flags are read, so selection/gather of the next batch overlaps
-    the previous multiply and the consumer's host work overlaps device
-    compute. A nonzero flag drops that batch to the synchronous retry loop
-    (capacities ×2 per attempt — selection first, multiply second).
-    ``pipelined=False`` is the serial schedule: one host sync per batch.
+    ``exec_spec.pipelined=True`` (default) runs the Alg. 4 loop as a
+    lookahead window: batch i+1..i+lookahead are dispatched before batch i's
+    device-resident overflow flags are read, so selection/gather of the next
+    batch overlaps the previous multiply and the consumer's host work
+    overlaps device compute. A nonzero flag drops that batch to the
+    synchronous retry loop (capacities ×2 per attempt — selection first,
+    multiply second). ``pipelined=False`` is the serial schedule: one host
+    sync per batch.
 
-    ``binned`` switches the sparse local multiply to the k-binned paired
-    kernel: "auto" uses it when the symbolic bin plan strictly reduces
-    pairing work (and the semiring is plus_times); True forces it; False
-    pins ESC. Consumers are always invoked in batch order.
+    ``exec_spec.binned`` switches the sparse local multiply to the k-binned
+    paired kernel: "auto" uses it when the symbolic bin plan strictly
+    reduces pairing work (and the semiring is plus_times); True forces it;
+    False pins ESC. Consumers are always invoked in batch order.
 
-    ``local_path`` is the plan-driven 3-way dispatch over ESC / k-binned /
-    hash-accumulator local multiplies: "auto" (default) lets the plan pick —
-    hash when the compression factor clears ``HASH_CF_THRESHOLD`` (any
-    semiring; the plan then budgets O(nnz_out·load_factor) resident bytes,
-    so high-cf multiplies batch less), else the existing binned-vs-ESC
-    choice; "hash"/"binned"/"esc" force a path. An explicit ``binned``
-    override (True/False) pins the classic two-way dispatch — back-compat
-    for callers that predate the hash path. One ``local_path`` decision is
-    made per plan (not per batch) so iterated runs keep ONE executable per
-    path; ``hash_caps_floor`` keeps its static caps monotone across
-    iterations.
+    ``spec.local_path`` is the plan-driven 3-way dispatch over ESC /
+    k-binned / hash-accumulator local multiplies: "auto" (default) lets the
+    plan pick — hash when the compression factor clears
+    ``HASH_CF_THRESHOLD`` (any semiring; the plan then budgets
+    O(nnz_out·load_factor) resident bytes, so high-cf multiplies batch
+    less), else the existing binned-vs-ESC choice; "hash"/"binned"/"esc"
+    force a path. An explicit ``binned`` override (True/False) pins the
+    classic two-way dispatch — back-compat for callers that predate the
+    hash path. One ``local_path`` decision is made per plan (not per batch)
+    so iterated runs keep ONE executable per path; ``floors.hash_caps``
+    keeps its static caps monotone across iterations.
 
-    ``degrade`` (default on) bounds the retry ladder at a per-process memory
-    ceiling: when doubling the multiply caps would exceed
+    ``exec_spec.degrade`` (default on) bounds the retry ladder at a
+    per-process memory ceiling: when doubling the multiply caps would exceed
     ``max(per_process_memory, footprint(planned caps))`` — the planned-caps
     arm keeps legitimately-over-budget plans (slack, uncharged scratch)
     runnable while refusing runaway growth beyond them — the failing batch
@@ -852,6 +937,18 @@ def batched_summa3d(
     ``BatchedResult.report`` (`RunReport`). ``degrade=False`` restores the
     unbounded ladder.
     """
+    spec, floors, ex = resolve_specs(
+        spec, floors, exec_spec, legacy, default_local_path="auto",
+        where="batched_summa3d",
+    )
+    r_bytes, slack = spec.r_bytes, spec.slack
+    reserved_bytes = spec.reserved_bytes
+    mask, mask_complement = spec.mask, spec.mask_complement
+    local_path = spec.local_path
+    pipelined = ex.pipelined
+    max_retries, degrade = ex.max_retries, ex.degrade
+    sorted_merge, binned = ex.sorted_merge, ex.binned
+    kbin_caps_floor, caps_pow2 = floors.kbin_caps, floors.caps_pow2
     assert local_path in ("auto", "esc", "binned", "hash"), local_path
     # the plan only budgets the hash path when the driver could dispatch it:
     # an explicit binned override pins the classic O(flops) budget.
@@ -859,12 +956,8 @@ def batched_summa3d(
     if local_path == "auto" and (binned != "auto" or path != "sparse"):
         plan_local_path = "esc"
     plan = plan_batches(
-        a, b, grid, per_process_memory, r_bytes=r_bytes, slack=slack,
-        force_num_batches=force_num_batches, reserved_bytes=reserved_bytes,
-        mask=mask, mask_complement=mask_complement,
-        caps_pow2=caps_pow2, caps_floor=caps_floor, sel_cap_floor=sel_cap_floor,
-        num_batches_floor=num_batches_floor, kbin_candidates=kbin_candidates,
-        local_path=plan_local_path, hash_caps_floor=hash_caps_floor,
+        a, b, grid, per_process_memory,
+        spec=spec.replace(local_path=plan_local_path), floors=floors,
     )
     nb = plan.num_batches
     n_cols = b.shape[1]
@@ -1036,11 +1129,14 @@ def batched_summa3d(
         d = 2
         while True:
             try:
+                # a fresh sub-plan: caller floors and bin pins do not apply
+                # (sub-batch caps live in their own static-signature space)
                 sub = plan_batches(
-                    a, b, grid, per_process_memory, r_bytes=r_bytes,
-                    slack=slack, force_num_batches=nb * d,
-                    reserved_bytes=reserved_bytes, mask=mask,
-                    mask_complement=mask_complement, local_path=forced,
+                    a, b, grid, per_process_memory,
+                    spec=spec.replace(
+                        local_path=forced, force_num_batches=nb * d,
+                        kbin_candidates=None,
+                    ),
                 )
             except MemoryError as e:
                 raise RuntimeError(
@@ -1131,7 +1227,7 @@ def batched_summa3d(
         # deferred import: runtime.resilient imports this module (RunReport)
         from ..runtime.driver import LookaheadWindow
 
-        window = LookaheadWindow(lookahead, finish)
+        window = LookaheadWindow.from_exec(ex, finish)
         for bi in range(nb):
             c_batch, ovf = dispatch(bi, caps, sel_cap, kb, hc, mask_cap)
             window.push(bi, post(bi, c_batch), ovf)

@@ -33,6 +33,141 @@ R_BYTES_DEFAULT = 12
 
 
 @dataclasses.dataclass(frozen=True)
+class SymbolicCounts:
+    """Host-side output of the symbolic pass (all numpy).
+
+    Only count *vectors* ever travel (§IV-A, Fig. 8) — the same payload now
+    also carries what the numeric pass needs to size selection buffers and
+    the k-bin plan, so no extra communication round is spent on either.
+    ``mask_colcounts`` (masked multiplies only) holds the mask's exact
+    per-(tile, local column) entry counts — the §V-B observation that a
+    strict mask bounds C's structure, so the batch plan can budget survivors
+    instead of the full product.
+
+    Two producers, one consumer (``batched.plan_from_symbolic``): the
+    distributed pass (``batched.symbolic3d_counts``, counts computed ON the
+    grid the operands live on) and the no-device oracle below
+    (``host_symbolic_counts``, counts computed from host COO for ANY
+    candidate grid shape — the autotuner's way of pricing grids the
+    operands were never scattered to).
+    """
+
+    percol: np.ndarray  # (pr, pc, l, tn_b) flops per local output column
+    b_colcounts: np.ndarray  # (pr, pc, l, tn_b) B entries per local column
+    a_kcounts: np.ndarray  # (pr, l, k_tot) per-k counts of gathered A
+    b_kcounts: np.ndarray  # (pc, l, k_tot) per-k counts of gathered B
+    mask_colcounts: np.ndarray = None  # (pr, pc, l, wl) mask nnz, or None
+
+
+def _host_triplets(a):
+    """(rows, cols) of the live entries of a host COO (duck-typed: anything
+    with ``rows``/``cols``/``nnz`` numpy-convertible attributes works)."""
+    nnz = int(a.nnz)
+    return (
+        np.asarray(a.rows[:nnz]).astype(np.int64),
+        np.asarray(a.cols[:nnz]).astype(np.int64),
+    )
+
+
+def host_tile_counts(a, grid_shape, kind: str) -> np.ndarray:
+    """Per-tile nnz of ``a`` laid out as ``kind`` on a CANDIDATE grid shape
+    — pure host math (mirrors ``distsparse._tile_layout``'s indexing without
+    building tiles or touching a device). Returns (pr, pc, l)."""
+    pr, pc, l = grid_shape
+    m, n = a.shape
+    rows, cols = _host_triplets(a)
+    if kind in ("A", "C"):
+        assert m % pr == 0 and n % (pc * l) == 0, (a.shape, grid_shape)
+        w, wl = n // pc, n // pc // l
+        ti = rows // (m // pr)
+        tj = cols // w
+        tk = (cols % w) // wl
+    else:
+        assert m % (pr * l) == 0 and n % pc == 0, (a.shape, grid_shape)
+        w, wl = m // pr, m // pr // l
+        ti = rows // w
+        tk = (rows % w) // wl
+        tj = cols // (n // pc)
+    tile_id = (ti * pc + tj) * l + tk
+    return np.bincount(tile_id, minlength=pr * pc * l).reshape(pr, pc, l)
+
+
+def host_symbolic_counts(a, b, grid_shape, mask=None) -> SymbolicCounts:
+    """The symbolic pass as a host ORACLE: exact per-column flops / count
+    vectors for ``a``·``b`` distributed on a candidate ``grid_shape`` —
+    without scattering anything or touching a device.
+
+    Reproduces ``batched._symbolic3d_jit`` bit-for-bit (asserted by tests):
+    A's per-(row block, layer, stage-k) counts contracted against B's
+    entries through the stage coordinate k_idx = s·wl + local row. Square
+    layer grids only (pr == pc), matching the distributions' alignment
+    precondition. This is what lets the autotuner enumerate (pr, pc, l)
+    candidates from one pass over the host COO per candidate, no trial
+    multiplies.
+    """
+    pr, pc, l = grid_shape
+    assert pr == pc, f"square layer grids only, got {grid_shape}"
+    m_a, k_dim = a.shape
+    k_dim_b, n_b = b.shape
+    assert k_dim == k_dim_b, (a.shape, b.shape)
+    w_a, wl_a = k_dim // pc, k_dim // pc // l
+    assert m_a % pr == 0 and k_dim % (pc * l) == 0, (a.shape, grid_shape)
+    assert k_dim % (pr * l) == 0 and n_b % pc == 0, (b.shape, grid_shape)
+    tn_b = n_b // pc
+    k_tot = pc * wl_a
+
+    # A: per-(row block, layer, stage coordinate) column counts — the host
+    # image of cc_full = all_gather(col_counts, COL_AX) per (i, k)
+    ar, ac = _host_triplets(a)
+    a_i = ar // (m_a // pr)
+    a_k = (ac % w_a) // wl_a
+    a_q = (ac // w_a) * wl_a + (ac % wl_a)
+    acc = np.zeros((pr, l, k_tot), np.int64)
+    np.add.at(acc, (a_i, a_k, a_q), 1)
+
+    # B: tile coordinates + stage coordinate k_idx = s*wl + local row
+    br, bc = _host_triplets(b)
+    w_b, wl_b = k_dim // pr, k_dim // pr // l
+    b_s = br // w_b
+    b_k = (br % w_b) // wl_b
+    b_lr = br % wl_b
+    b_j = bc // tn_b
+    b_lc = bc % tn_b
+    b_q = b_s * wl_b + b_lr
+
+    bcc = np.zeros((pr, pc, l, tn_b), np.int64)
+    np.add.at(bcc, (b_s, b_j, b_k, b_lc), 1)
+    bkc = np.zeros((pc, l, k_tot), np.int64)
+    np.add.at(bkc, (b_j, b_k, b_q), 1)
+
+    # percol[i, j, k, c] = Σ over B entries of (grid col j, layer k, local
+    # col c): A's stage-k_idx count in row block i — vectorized as one
+    # weighted bincount per row block over the (j, k, c) key
+    key = (b_j * l + b_k) * tn_b + b_lc
+    percol = np.zeros((pr, pc * l * tn_b), np.int64)
+    for i in range(pr):
+        percol[i] = np.round(np.bincount(
+            key, weights=acc[i, b_k, b_q], minlength=pc * l * tn_b
+        )).astype(np.int64)
+    percol = percol.reshape(pr, pc, l, tn_b)
+
+    mcc = None
+    if mask is not None:
+        assert mask.shape == (m_a, n_b), (mask.shape, a.shape, b.shape)
+        w_c, wl_c = n_b // pc, n_b // pc // l
+        mr, mc_ = _host_triplets(mask)
+        mcc = np.zeros((pr, pc, l, wl_c), np.int64)
+        np.add.at(mcc, (
+            mr // (m_a // pr), mc_ // w_c, (mc_ % w_c) // wl_c, mc_ % wl_c,
+        ), 1)
+
+    return SymbolicCounts(
+        percol=percol, b_colcounts=bcc, a_kcounts=acc, b_kcounts=bkc,
+        mask_colcounts=mcc,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
 class SymbolicResult:
     """Host-side outcome of the symbolic step (all python ints)."""
 

@@ -45,6 +45,16 @@ class LookaheadWindow:
         self.finish = finish
         self._inflight: deque = deque()
 
+    @classmethod
+    def from_exec(cls, exec_spec, finish: Callable[..., None]
+                  ) -> "LookaheadWindow":
+        """Window sized by an ``ExecSpec``: ``lookahead`` deep when the
+        pipelined schedule is on, depth 0 (synchronous — every push
+        completes immediately) when it is off. The one place the exec
+        policy turns into schedule mechanics, shared by the batched driver
+        and the serving engine."""
+        return cls(exec_spec.lookahead if exec_spec.pipelined else 0, finish)
+
     def push(self, *item) -> None:
         self._inflight.append(item)
         while len(self._inflight) > self.depth:

@@ -12,9 +12,10 @@ when no split fits.
 The plan cache is keyed by the matrix signature — global shape, pow2 nnz
 profile, pow2 scatter capacities, pow2 k-bin profile (max per-column
 counts), semiring, local-path policy, mask id — and stores the pow2/floor
-capacities of the last plan with that signature. Repeat traffic re-plans
-through ``plan_batches(caps_pow2=True, caps_floor=...)`` with the cached
-floors, landing on the IDENTICAL fused-step static signature: the dispatch
+capacities of the last plan with that signature as one ``PlanFloors``.
+Repeat traffic re-plans through ``plan_batches(spec=..., floors=...)`` with
+the cached floors, landing on the IDENTICAL fused-step static signature: the
+dispatch
 goes through the driver's shared ``batched._fused_jit``, so a cache hit
 costs zero retraces (asserted via ``summa3d.TRACE_COUNTS`` in the tests).
 
@@ -47,6 +48,7 @@ from ..core.batched import (
 from ..core.distsparse import DistSparse, scatter_to_grid, tile_nnz_counts
 from ..core.grid import Grid
 from ..core.sparse import SparseCOO, from_numpy_coo
+from ..core.specs import PlanFloors, PlanSpec
 from ..core.summa3d import BatchCaps, BinnedCaps, HashCaps
 from ..core.symbolic import rup8 as _rup8, rup_pow2 as _rup_pow2
 from ..runtime.driver import LookaheadWindow
@@ -78,6 +80,27 @@ class ServeConfig:
     max_retries: int = 4  # per-batch overflow retry bound
     max_splits: int = 3  # admission force_num_batches doublings before refusal
     local_path: str = "auto"  # 3-way local-multiply policy (part of the key)
+    # base capacity floors applied to every FIRST plan of a signature (an
+    # autotuner warm-start: repeat traffic still folds its own floors on top)
+    seed_floors: Optional[PlanFloors] = None
+
+    @classmethod
+    def from_tuned(cls, tuned, **overrides) -> "ServeConfig":
+        """Admission config from an autotuner ``TunedConfig`` (duck-typed:
+        anything with per_process_memory / spec / floors / exec_spec) — the
+        tuned local path, slack, lookahead, and batch-count floor flow
+        straight into the pricing path, no kwarg threading."""
+        kw = dict(
+            per_process_memory=tuned.per_process_memory,
+            r_bytes=tuned.spec.r_bytes,
+            slack=tuned.spec.slack,
+            lookahead=tuned.exec_spec.lookahead,
+            max_retries=tuned.exec_spec.max_retries,
+            local_path=tuned.spec.local_path,
+            seed_floors=tuned.floors,
+        )
+        kw.update(overrides)
+        return cls(**kw)
 
 
 @dataclasses.dataclass
@@ -97,17 +120,13 @@ class MultiplyResult:
 
 @dataclasses.dataclass
 class PlanCacheEntry:
-    """Floors for replanning repeat traffic onto one executable: the pow2
-    capacities a previous same-signature request actually USED (monotone —
-    retry growth feeds back), plus its admission price."""
+    """Floors for replanning repeat traffic onto one executable: ONE
+    `PlanFloors` holding the pow2 capacities a previous same-signature
+    request actually USED (monotone — retry growth folds back via
+    ``merged()``), plus the decided local path and admission price."""
 
-    caps: BatchCaps
-    sel_cap: int
-    num_batches: int
+    floors: PlanFloors
     local_path: str
-    hash_caps: Optional[HashCaps]
-    kbin_candidates: Optional[Tuple[int, ...]]
-    kb_caps: Optional[BinnedCaps]
     price_bytes: int
     splits: int
     hits: int = 0
@@ -223,25 +242,25 @@ class SpgemmEngine:
         B = scatter_to_grid(req.b, self.grid, "B", cap=cap_b)
         M = (scatter_to_grid(req.mask, self.grid, "A")
              if req.mask is not None else None)
-        floors = {}
         if entry is not None:
-            floors = dict(
-                caps_floor=entry.caps, sel_cap_floor=entry.sel_cap,
-                num_batches_floor=entry.num_batches,
-                hash_caps_floor=entry.hash_caps,
-                kbin_candidates=entry.kbin_candidates,
-            )
+            floors = entry.floors
+        else:
+            floors = cfg.seed_floors or PlanFloors()
+        floors = floors.replace(caps_pow2=True)
         local_path = entry.local_path if entry is not None else cfg.local_path
         max_nnz_a = int(np.asarray(A.nnz).max())
         max_nnz_b = int(np.asarray(B.nnz).max())
         splits = entry.splits if entry is not None else 0
-        force = {}
+        force = None
         while True:
             try:
                 plan = plan_batches(
                     A, B, self.grid, per_process_memory=cfg.per_process_memory,
-                    r_bytes=cfg.r_bytes, slack=cfg.slack, mask=M,
-                    caps_pow2=True, local_path=local_path, **floors, **force,
+                    spec=PlanSpec(
+                        mask=M, local_path=local_path, slack=cfg.slack,
+                        r_bytes=cfg.r_bytes, force_num_batches=force,
+                    ),
+                    floors=floors,
                 )
             except MemoryError as e:
                 return None, str(e)
@@ -253,7 +272,7 @@ class SpgemmEngine:
                 break
             splits += 1
             self.stats["splits"] += 1
-            force = {"force_num_batches": plan.num_batches * 2}
+            force = plan.num_batches * 2
         if price > cfg.per_process_memory:
             return None, (
                 f"footprint {price} exceeds budget {cfg.per_process_memory} "
@@ -270,11 +289,12 @@ class SpgemmEngine:
                 plan.kbin.num_bins, _rup_pow2(plan.kbin.bin_cap_a),
                 _rup_pow2(plan.kbin.bin_cap_b),
             )
-            if entry is not None and entry.kb_caps is not None:
+            prior_kb = entry.floors.kbin_caps if entry is not None else None
+            if prior_kb is not None:
                 kb = BinnedCaps(
                     kb.num_bins,
-                    max(kb.bin_cap_a, entry.kb_caps.bin_cap_a),
-                    max(kb.bin_cap_b, entry.kb_caps.bin_cap_b),
+                    max(kb.bin_cap_a, prior_kb.bin_cap_a),
+                    max(kb.bin_cap_b, prior_kb.bin_cap_b),
                 )
         # the cache entry is written at PLAN time (not completion) so repeat
         # traffic hits even while the first request with this signature is
@@ -285,11 +305,15 @@ class SpgemmEngine:
         else:
             self.stats["misses"] += 1
             self.plan_cache[key] = PlanCacheEntry(
-                caps=plan.caps, sel_cap=plan.sel_cap,
-                num_batches=plan.num_batches, local_path=plan.local_path,
-                hash_caps=(plan.hash_caps if use_hash else None),
-                kbin_candidates=((kb.num_bins,) if kb is not None else None),
-                kb_caps=kb, price_bytes=price, splits=splits,
+                floors=PlanFloors(
+                    caps=plan.caps, sel_cap=plan.sel_cap,
+                    num_batches=plan.num_batches,
+                    kbin_caps=kb,
+                    hash_caps=(plan.hash_caps if use_hash else None),
+                    caps_pow2=True,
+                ),
+                local_path=plan.local_path,
+                price_bytes=price, splits=splits,
             )
         return _Active(
             req=req, key=key, plan=plan, A=A, B=B, M=M,
@@ -388,36 +412,11 @@ class SpgemmEngine:
             c = from_numpy_coo(rows, cols, vals, shape, cap=max(len(rows), 8))
             # fold retry growth back into the entry (monotone floors)
             entry = self.plan_cache[act.key]
-            entry.caps = BatchCaps(*(
-                max(x, y) for x, y in zip(
-                    dataclasses.astuple(entry.caps),
-                    dataclasses.astuple(act.caps),
-                )
+            entry.floors = entry.floors.merged(PlanFloors(
+                caps=act.caps, sel_cap=act.sel_cap, num_batches=act.nb,
+                kbin_caps=act.kb, hash_caps=act.hc, caps_pow2=True,
             ))
-            entry.sel_cap = max(entry.sel_cap, act.sel_cap)
-            entry.num_batches = max(entry.num_batches, act.nb)
             entry.price_bytes = max(entry.price_bytes, act.price)
-            if act.hc is not None:
-                entry.hash_caps = act.hc if entry.hash_caps is None else (
-                    HashCaps(
-                        table_cap=max(entry.hash_caps.table_cap,
-                                      act.hc.table_cap),
-                        chunk_cap=max(entry.hash_caps.chunk_cap,
-                                      act.hc.chunk_cap),
-                        num_chunks=max(entry.hash_caps.num_chunks,
-                                       act.hc.num_chunks),
-                        max_probes=max(entry.hash_caps.max_probes,
-                                       act.hc.max_probes),
-                    )
-                )
-            if act.kb is not None:
-                entry.kb_caps = act.kb if entry.kb_caps is None else (
-                    BinnedCaps(
-                        act.kb.num_bins,
-                        max(entry.kb_caps.bin_cap_a, act.kb.bin_cap_a),
-                        max(entry.kb_caps.bin_cap_b, act.kb.bin_cap_b),
-                    )
-                )
             self.stats["served"] += 1
             self.done.append(MultiplyResult(
                 rid=act.req.rid, status="ok", c=c,

@@ -43,9 +43,8 @@ from ..core.batched import RunReport, batched_summa3d
 from ..core.distsparse import DistSparse, dist_spec, scatter_to_grid
 from ..core.grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from ..core.sparse import SparseCOO, from_numpy_coo
+from ..core.specs import ExecSpec, PlanFloors, PlanSpec
 from ..core.summa3d import (
-    BatchCaps,
-    HashCaps,
     _pmax_grid,
     _psum_grid,
     _squeeze_tile,
@@ -190,7 +189,7 @@ def triangle_count(a: SparseCOO, grid: Grid,
     batched_summa3d(
         A_d, B_d, grid, per_process_memory=per_process_memory,
         consumer=consumer, path="sparse", semiring=sr.PLUS_TIMES,
-        mask=M_d, postprocess=postprocess,
+        spec=PlanSpec(mask=M_d), postprocess=postprocess,
     )
     return int(round(sum(totals)))
 
@@ -296,7 +295,7 @@ def overlap_pairs(
     batched_summa3d(
         A_d, B_d, grid, per_process_memory=per_process_memory,
         consumer=consumer, path="sparse", postprocess=postprocess,
-        mask=M_d,
+        spec=PlanSpec(mask=M_d),
     )
     rows = np.concatenate([p[0] for p in pieces])
     cols = np.concatenate([p[1] for p in pieces])
@@ -393,11 +392,8 @@ class APSPLoopState:
     it: int
     history: List[dict]
     report: RunReport
-    caps_floor: Optional[BatchCaps] = None
-    sel_floor: int = 0
-    nb_floor: int = 0
+    floors: PlanFloors = dataclasses.field(default_factory=PlanFloors)
     lp_arg: object = "auto"
-    hc_floor: Optional[HashCaps] = None
 
 
 def _apsp_triplets(d: SparseCOO):
@@ -509,18 +505,17 @@ def _apsp_step(
     res = batched_summa3d(
         state.A, state.B, grid, per_process_memory=cfg.per_process_memory,
         consumer=consumer, path="sparse", semiring=sr.MIN_PLUS,
-        force_num_batches=cfg.force_num_batches, lookahead=cfg.lookahead,
-        r_bytes=cfg.r_bytes, binned=False, reserved_bytes=reserved,
-        **({"slack": slack} if slack is not None else {}),
-        caps_pow2=True, caps_floor=state.caps_floor,
-        sel_cap_floor=state.sel_floor, num_batches_floor=state.nb_floor,
-        local_path=state.lp_arg, hash_caps_floor=state.hc_floor,
+        spec=PlanSpec(
+            local_path=state.lp_arg, r_bytes=cfg.r_bytes,
+            reserved_bytes=reserved,
+            force_num_batches=cfg.force_num_batches,
+            **({"slack": slack} if slack is not None else {}),
+        ),
+        floors=state.floors.replace(caps_pow2=True),
+        exec_spec=ExecSpec(lookahead=cfg.lookahead, binned=False),
     )
-    state.caps_floor, state.sel_floor = res.plan.caps, res.plan.sel_cap
-    state.nb_floor = res.plan.num_batches
+    state.floors = state.floors.merged(res.floors())
     state.lp_arg = res.local_path
-    if res.hash_caps is not None:
-        state.hc_floor = res.hash_caps
     a_next, b_next, ovf = reassemble_operands(
         tuple(batches), grid, cap_a, cap_b
     )
@@ -592,13 +587,8 @@ def apsp_iterate_resilient(
             "history": state.history,
             "report": state.report.to_dict(),
             "plan_sig": {
-                "caps": (list(dataclasses.astuple(state.caps_floor))
-                         if state.caps_floor is not None else None),
-                "sel": state.sel_floor,
-                "nb": state.nb_floor,
+                "floors": state.floors.to_meta(),
                 "local_path": state.lp_arg,
-                "hash_caps": (list(dataclasses.astuple(state.hc_floor))
-                              if state.hc_floor is not None else None),
             },
         }
         return arrays, meta
@@ -611,12 +601,8 @@ def apsp_iterate_resilient(
             B=_mcl._dist_from_arrays(arrays, "B", grid, (n, n), tile_b, "B"),
             it=int(meta["it"]), history=list(meta["history"]),
             report=RunReport.from_dict(meta["report"]),
-            caps_floor=(BatchCaps(*(int(x) for x in sig["caps"]))
-                        if sig["caps"] else None),
-            sel_floor=int(sig["sel"]), nb_floor=int(sig["nb"]),
+            floors=PlanFloors.from_meta(sig["floors"]),
             lp_arg=sig["local_path"],
-            hc_floor=(HashCaps(*(int(x) for x in sig["hash_caps"]))
-                      if sig["hash_caps"] else None),
         )
 
     def step_fn(state, it, inj):

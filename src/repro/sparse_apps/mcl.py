@@ -57,10 +57,8 @@ from ..core.batched import RunReport, batched_summa3d
 from ..core.distsparse import DistSparse, dist_spec, local_col_reduce
 from ..core.grid import COL_AX, LAYER_AX, ROW_AX, Grid
 from ..core.sparse import SparseCOO, from_dense_overflow, from_numpy_coo
+from ..core.specs import ExecSpec, PlanFloors, PlanSpec
 from ..core.summa3d import (
-    BatchCaps,
-    BinnedCaps,
-    HashCaps,
     _pmax_grid,
     _psum_grid,
     _squeeze_tile,
@@ -399,12 +397,14 @@ def _extract_dense_batch(tiles: np.ndarray, col_map: np.ndarray):
 @dataclasses.dataclass
 class MCLLoopState:
     """Everything one sparse MCL iteration carries to the next — the
-    device-resident iterate (A/B operands) PLUS the full plan signature
-    (pow2/floor caps, pinned k-bin signature, hash caps, local path,
-    batch-count floor). The resilient loop checkpoints exactly this: the
-    arrays via the content-hashed store, the signature as manifest meta —
-    so a restored run replans to the IDENTICAL fused-step static signature
-    and hits the jit cache (zero extra retraces after a resume)."""
+    device-resident iterate (A/B operands) PLUS the plan signature: ONE
+    ``PlanFloors`` (pow2/floor caps, pinned k-bin caps, hash caps,
+    batch-count floor — it replaced four parallel floor attributes) and the
+    pinned binned/local-path decisions. The resilient loop checkpoints
+    exactly this: the arrays via the content-hashed store, the signature as
+    manifest meta — so a restored run replans to the IDENTICAL fused-step
+    static signature and hits the jit cache (zero extra retraces after a
+    resume)."""
 
     A: DistSparse
     B: DistSparse
@@ -412,14 +412,9 @@ class MCLLoopState:
     chaos: float
     history: List[dict]
     report: RunReport
-    caps_floor: Optional[BatchCaps] = None
-    sel_floor: int = 0
-    nb_floor: int = 0
+    floors: PlanFloors = dataclasses.field(default_factory=PlanFloors)
     binned_arg: object = "auto"
-    kbin_candidates: Optional[Tuple[int, ...]] = None
-    kb_floor: Optional[BinnedCaps] = None
     lp_arg: object = "auto"
-    hc_floor: Optional[HashCaps] = None
 
 
 def _mcl_caps(n: int, grid: Grid, cfg: MCLConfig) -> Tuple[int, int, int]:
@@ -488,26 +483,21 @@ def _mcl_sparse_step(
         state.A, state.B, grid,
         per_process_memory=cfg.per_process_memory,
         consumer=consumer, path="sparse",
-        postprocess=postprocess, reserved_bytes=reserved,
-        force_num_batches=cfg.force_num_batches,
-        lookahead=cfg.lookahead, r_bytes=cfg.r_bytes,
-        binned=state.binned_arg,
-        **({"slack": slack} if slack is not None else {}),
-        caps_pow2=True, caps_floor=state.caps_floor,
-        sel_cap_floor=state.sel_floor,
-        num_batches_floor=state.nb_floor,
-        kbin_candidates=state.kbin_candidates, kbin_caps_floor=state.kb_floor,
-        local_path=state.lp_arg, hash_caps_floor=state.hc_floor,
+        postprocess=postprocess,
+        spec=PlanSpec(
+            local_path=state.lp_arg, r_bytes=cfg.r_bytes,
+            reserved_bytes=reserved,
+            force_num_batches=cfg.force_num_batches,
+            **({"slack": slack} if slack is not None else {}),
+        ),
+        floors=state.floors.replace(caps_pow2=True),
+        exec_spec=ExecSpec(lookahead=cfg.lookahead, binned=state.binned_arg),
     )
-    state.caps_floor, state.sel_floor = res.plan.caps, res.plan.sel_cap
-    state.nb_floor = res.plan.num_batches
-    state.binned_arg = res.binned  # pin the auto decision from iteration 1
-    state.lp_arg = res.local_path  # same for the 3-way local-path decision
-    if res.binned_caps is not None:
-        state.kbin_candidates = (res.binned_caps.num_bins,)
-        state.kb_floor = res.binned_caps
-    if res.hash_caps is not None:
-        state.hc_floor = res.hash_caps
+    # pin iteration 1's decisions + used capacities (monotone fold) so every
+    # later iteration replans onto the same fused-step static signature
+    state.floors = state.floors.merged(res.floors())
+    state.binned_arg = res.binned
+    state.lp_arg = res.local_path
     state.A, state.B, ovf = reassemble_operands(
         tuple(batches), grid, cap_a, cap_b
     )
@@ -585,49 +575,20 @@ def _dist_from_arrays(
 
 def _plan_sig_encode(state: MCLLoopState) -> dict:
     """JSON-safe plan signature: everything `plan_batches` needs to rebuild
-    the identical fused-step static signature after a restore."""
+    the identical fused-step static signature after a restore — the floors
+    round-trip through ``PlanFloors.to_meta`` plus the two pinned driver
+    decisions."""
     return {
-        "caps": (
-            list(dataclasses.astuple(state.caps_floor))
-            if state.caps_floor is not None else None
-        ),
-        "sel": state.sel_floor,
-        "nb": state.nb_floor,
+        "floors": state.floors.to_meta(),
         "binned": state.binned_arg,
-        "kbin_candidates": (
-            list(state.kbin_candidates) if state.kbin_candidates else None
-        ),
-        "kb": (
-            list(dataclasses.astuple(state.kb_floor))
-            if state.kb_floor is not None else None
-        ),
         "local_path": state.lp_arg,
-        "hash_caps": (
-            list(dataclasses.astuple(state.hc_floor))
-            if state.hc_floor is not None else None
-        ),
     }
 
 
 def _plan_sig_decode(state: MCLLoopState, sig: dict) -> None:
-    state.caps_floor = (
-        BatchCaps(*(int(x) for x in sig["caps"])) if sig["caps"] else None
-    )
-    state.sel_floor = int(sig["sel"])
-    state.nb_floor = int(sig["nb"])
+    state.floors = PlanFloors.from_meta(sig["floors"])
     state.binned_arg = sig["binned"]
-    state.kbin_candidates = (
-        tuple(int(x) for x in sig["kbin_candidates"])
-        if sig["kbin_candidates"] else None
-    )
-    state.kb_floor = (
-        BinnedCaps(*(int(x) for x in sig["kb"])) if sig["kb"] else None
-    )
     state.lp_arg = sig["local_path"]
-    state.hc_floor = (
-        HashCaps(*(int(x) for x in sig["hash_caps"]))
-        if sig["hash_caps"] else None
-    )
 
 
 def mcl_iterate_resilient(
@@ -715,9 +676,7 @@ def _mcl_iterate_dense(
     A = _scatter(a, grid, "A")
     B = _scatter(a, grid, "B")
     history: List[dict] = []
-    caps_floor = None
-    sel_floor = 0
-    nb_floor = 0
+    floors = PlanFloors(caps_pow2=True)
     for it in range(cfg.max_iters):
         t0_bytes = transfer_bytes()
         t0 = time.perf_counter()
@@ -746,14 +705,14 @@ def _mcl_iterate_dense(
             A, B, grid,
             per_process_memory=cfg.per_process_memory,
             consumer=consumer, path="dense", postprocess=postprocess,
-            reserved_bytes=reserved,
-            force_num_batches=cfg.force_num_batches,
-            lookahead=cfg.lookahead, r_bytes=cfg.r_bytes,
-            caps_pow2=True, caps_floor=caps_floor, sel_cap_floor=sel_floor,
-            num_batches_floor=nb_floor,
+            spec=PlanSpec(
+                r_bytes=cfg.r_bytes, reserved_bytes=reserved,
+                force_num_batches=cfg.force_num_batches,
+            ),
+            floors=floors,
+            exec_spec=ExecSpec(lookahead=cfg.lookahead),
         )
-        caps_floor, sel_floor = res.plan.caps, res.plan.sel_cap
-        nb_floor = res.plan.num_batches
+        floors = floors.merged(res.floors())
         A, B, ovf = reassemble_operands(tuple(batches), grid, cap_a, cap_b)
         # ONE host sync per iteration, scalars only (convergence check)
         chaos = max(float(_to_host(st["chaos"])) for st in stats)

@@ -1,0 +1,192 @@
+"""Symbolic α–β–γ cost model of the batched SUMMA3D multiply (Table II, §IV).
+
+One multiply at grid (pr, pc, l) with b batches is priced as
+
+  predicted_ms = overhead · (dispatch + sync + comm + compute)
+
+  dispatch = dispatch_ms · b                    per-batch fused-step launch
+  sync     = sync_ms · b / lookahead            host flag reads, amortized by
+                                                the pipelined window (serial
+                                                schedule: lookahead = 1)
+  comm     = beta_ms_per_byte · per-process Table II bytes
+  compute  = γ_path · per-path compute units
+
+Table II bandwidth terms (per process, r bytes per stored nonzero, totals
+over the whole run — the model the comm bench reconciles against measured
+HLO collectives):
+
+  A-Gather        b · r · nnz(A)/p · (pc − 1)   A is re-gathered every batch
+  B-Gather        r · nnz(B)/p · (pr − 1)       each batch gathers 1/b of B
+  AllToAll-Fiber  r · flops/p · (l − 1)/l       every partial product crosses
+                                                the fiber at most once
+
+Compute units per local-multiply path: ESC and hash pay γ per flop (the hash
+γ also covers its serialized per-chunk insert passes, which is why it is
+~100× the ESC γ per flop on this backend); the k-binned path pays the ESC
+merge cost plus γ_binned per PAIRING — ``b · KBinPlan.pairings``, the exact
+quantity the symbolic k-bin plan minimizes, so a pinned bin count reprices
+the candidate without re-running anything.
+
+Coefficient defaults are priors fitted once against the checked-in
+``BENCH_local_kernels.json`` / ``BENCH_summa3d.json`` rows (CPU backend);
+``fit_overhead`` refits the single multiplicative ``overhead`` as the
+geometric mean of measured/raw over whatever measured rows are at hand —
+that one scalar is the hardware calibration (the WSE/TPU recipe: keep the
+model, refit overhead), and ``ACCEPT_BAND`` is the fixed predicted/measured
+acceptance band ``bench_tune`` records per row.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+#: fixed acceptance band for predicted/measured ratios after the overhead
+#: fit (recorded in BENCH_tune.json; asserted by check_bench_json and tests)
+ACCEPT_BAND = (0.25, 4.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostCoefficients:
+    """α–β–γ coefficients (ms). Defaults are CPU-backend priors fitted from
+    the checked-in bench artifacts; ``overhead`` is the refittable scalar."""
+
+    dispatch_ms: float = 9.6  # per-batch fused-step launch (α · phases)
+    sync_ms: float = 0.2  # per-batch host flag read (amortized by lookahead)
+    beta_ms_per_byte: float = 1e-6  # inverse bandwidth (β)
+    gamma_esc_ms: float = 8.109 / 61581  # per flop (local_kernels esc row)
+    gamma_hash_ms: float = 2.73e-2  # per flop (fused-step hash, per-chunk)
+    gamma_binned_ms: float = 4.6e-5  # per pairing (k-binned extra pass)
+    overhead: float = 1.0  # fitted measured/raw factor
+
+    def replace(self, **kw) -> "CostCoefficients":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommVolume:
+    """Per-process Table II bytes for one whole multiply (all batches)."""
+
+    a_gather_bytes: int
+    b_gather_bytes: int
+    fiber_bytes: int
+
+    @property
+    def per_process_bytes(self) -> int:
+        return self.a_gather_bytes + self.b_gather_bytes + self.fiber_bytes
+
+
+def comm_volume(
+    grid_shape: Tuple[int, int, int],
+    num_batches: int,
+    nnz_a: int,
+    nnz_b: int,
+    total_flops: int,
+    r_bytes: int = 12,
+) -> CommVolume:
+    """Table II α–β volumes (see module docstring) — pure host math."""
+    pr, pc, l = grid_shape
+    p = pr * pc * l
+    a_gather = num_batches * r_bytes * (nnz_a / p) * (pc - 1)
+    b_gather = r_bytes * (nnz_b / p) * (pr - 1)
+    fiber = r_bytes * (total_flops / p) * (l - 1) / l
+    return CommVolume(
+        a_gather_bytes=int(math.ceil(a_gather)),
+        b_gather_bytes=int(math.ceil(b_gather)),
+        fiber_bytes=int(math.ceil(fiber)),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    """Priced cost of one candidate configuration (end-to-end multiply)."""
+
+    total_ms: float
+    dispatch_ms: float
+    sync_ms: float
+    comm_ms: float
+    compute_ms: float
+    comm_bytes: int  # per-process Table II bytes (sum of the three terms)
+    a_gather_bytes: int
+    b_gather_bytes: int
+    fiber_bytes: int
+    num_batches: int
+    path: str
+
+    def to_meta(self) -> dict:
+        return {k: (round(v, 4) if isinstance(v, float) else v)
+                for k, v in dataclasses.asdict(self).items()}
+
+
+def compute_units(plan, path: str) -> Tuple[float, float]:
+    """(flop-priced units, pairing-priced units) of one whole multiply.
+
+    ESC/hash: every path pays the merge/compress over ``total_flops``
+    partial products. Binned additionally pays the per-batch pairing grid
+    the k-bin plan bounds (``pairings`` is a per-batch capacity product).
+    """
+    pairings = 0.0
+    if path == "binned" and plan.kbin is not None:
+        pairings = float(plan.kbin.pairings) * plan.num_batches
+    return float(plan.total_flops), pairings
+
+
+def predict_cost(
+    plan,
+    grid_shape: Tuple[int, int, int],
+    nnz_a: int,
+    nnz_b: int,
+    coeffs: Optional[CostCoefficients] = None,
+    r_bytes: int = 12,
+    pipelined: bool = True,
+    lookahead: int = 2,
+    path: Optional[str] = None,
+) -> CostBreakdown:
+    """Price one ``BatchPlan`` on ``grid_shape`` — per-batch terms × b plus
+    the Table II volumes. ``path`` overrides the plan's decided local path
+    (the autotuner prices explicit path candidates through here)."""
+    c = coeffs or CostCoefficients()
+    if path is None or path == "auto":
+        path = plan.local_path
+    nb = plan.num_batches
+    vol = comm_volume(grid_shape, nb, nnz_a, nnz_b, plan.total_flops, r_bytes)
+    flop_units, pairing_units = compute_units(plan, path)
+    gamma = {
+        "esc": c.gamma_esc_ms,
+        "binned": c.gamma_esc_ms,  # binned keeps the ESC merge pipeline
+        "hash": c.gamma_hash_ms,
+    }[path]
+    compute_ms = gamma * flop_units + c.gamma_binned_ms * pairing_units
+    dispatch_ms = c.dispatch_ms * nb
+    window = max(int(lookahead), 1) if pipelined else 1
+    sync_ms = c.sync_ms * nb / window
+    comm_ms = c.beta_ms_per_byte * vol.per_process_bytes
+    total = c.overhead * (dispatch_ms + sync_ms + comm_ms + compute_ms)
+    return CostBreakdown(
+        total_ms=total,
+        dispatch_ms=dispatch_ms,
+        sync_ms=sync_ms,
+        comm_ms=comm_ms,
+        compute_ms=compute_ms,
+        comm_bytes=vol.per_process_bytes,
+        a_gather_bytes=vol.a_gather_bytes,
+        b_gather_bytes=vol.b_gather_bytes,
+        fiber_bytes=vol.fiber_bytes,
+        num_batches=nb,
+        path=path,
+    )
+
+
+def fit_overhead(
+    pairs: Sequence[Tuple[float, float]],
+    coeffs: Optional[CostCoefficients] = None,
+) -> CostCoefficients:
+    """Refit the single ``overhead`` scalar from (raw_predicted_ms,
+    measured_ms) pairs — geometric mean of measured/raw, the hardware
+    calibration step (everything else in the model is symbolic)."""
+    c = coeffs or CostCoefficients()
+    ratios = [m / max(r, 1e-9) for r, m in pairs if m > 0]
+    if not ratios:
+        return c
+    log_mean = sum(math.log(x) for x in ratios) / len(ratios)
+    return c.replace(overhead=math.exp(log_mean))

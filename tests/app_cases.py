@@ -9,6 +9,7 @@ import numpy as np
 
 from repro.core import gen
 from repro.core.grid import make_grid
+from repro.core.specs import ExecSpec, PlanSpec
 from repro.sparse_apps.graph_algorithms import (
     overlap_pairs,
     overlap_pairs_host,
@@ -241,8 +242,10 @@ def case_triangle_masked_rmat():
     B_d = scatter_to_grid(U, grid, "B")
     M_d = scatter_to_grid(L, grid, "C")
     ppm = probe_memory_budget(A_d, B_d, grid)  # unmasked b ~ 3-4
-    pu = plan_batches(A_d, B_d, grid, per_process_memory=ppm)
-    pm = plan_batches(A_d, B_d, grid, per_process_memory=ppm, mask=M_d)
+    pu = plan_batches(A_d, B_d, grid, per_process_memory=ppm,
+                      spec=PlanSpec(local_path="esc"))
+    pm = plan_batches(A_d, B_d, grid, per_process_memory=ppm,
+                      spec=PlanSpec(mask=M_d, local_path="esc"))
     assert pu.num_batches > 1, pu.num_batches
     assert pm.num_batches < pu.num_batches, (pm.num_batches, pu.num_batches)
     assert pm.caps.d_cap < pu.caps.d_cap, (pm.caps, pu.caps)
@@ -327,8 +330,10 @@ def case_masked_multibatch_grid():
 
                 res = batched_summa3d(
                     A, B, grid, per_process_memory=1 << 26,
-                    consumer=consumer, path="sparse", force_num_batches=nb,
-                    mask=M, mask_complement=complement, binned=binned,
+                    consumer=consumer, path="sparse",
+                    spec=PlanSpec(force_num_batches=nb, mask=M,
+                                  mask_complement=complement),
+                    exec_spec=ExecSpec(binned=binned),
                 )
                 keep = ~mask_dense if complement else mask_dense
                 np.testing.assert_allclose(

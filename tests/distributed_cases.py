@@ -460,6 +460,65 @@ def case_ring_schedule_matches():
     print("OK ring_schedule_matches")
 
 
+def case_tune_oracle_parity():
+    """The autotuner's host symbolic oracle reproduces the distributed
+    symbolic pass BIT-FOR-BIT on a real 2×2×2 grid — counts, the derived
+    plan (capacities, batch count, decided local path), and the
+    ``PlanInputs.from_host`` capacities vs an actual default scatter — for
+    both the unmasked and masked formulations. This is what licenses
+    ``repro.tune`` to price candidate grids without scattering anything."""
+    from repro.core.batched import PlanInputs, plan_from_symbolic, \
+        symbolic3d_counts
+    from repro.core.specs import PlanFloors, PlanSpec
+    from repro.core.symbolic import host_symbolic_counts
+
+    grid = make_grid(2, 2, 2)
+    a = gen.rmat(6, edge_factor=8, seed=5)
+    b = gen.rmat(6, edge_factor=8, seed=6)
+    mask = gen.erdos_renyi(64, 4.0, seed=7)
+    A = scatter_to_grid(a, grid, "A")
+    B = scatter_to_grid(b, grid, "B")
+    M = scatter_to_grid(mask, grid, "C")
+
+    for m_host, m_dev in ((None, None), (mask, M)):
+        dev = symbolic3d_counts(A, B, grid, mask=m_dev)
+        host = host_symbolic_counts(a, b, (2, 2, 2), mask=m_host)
+        np.testing.assert_array_equal(np.asarray(dev.percol), host.percol)
+        np.testing.assert_array_equal(np.asarray(dev.b_colcounts),
+                                      host.b_colcounts)
+        np.testing.assert_array_equal(np.asarray(dev.a_kcounts),
+                                      host.a_kcounts)
+        np.testing.assert_array_equal(np.asarray(dev.b_kcounts),
+                                      host.b_kcounts)
+        if m_host is None:
+            assert host.mask_colcounts is None
+        else:
+            np.testing.assert_array_equal(np.asarray(dev.mask_colcounts),
+                                          host.mask_colcounts)
+
+        spec = PlanSpec(mask=m_dev)
+        ppm = 1 << 22
+        dev_plan = plan_batches(A, B, grid, per_process_memory=ppm,
+                                spec=spec)
+        inputs = PlanInputs.from_host(a, b, (2, 2, 2), mask=m_host)
+        host_plan = plan_from_symbolic(
+            host_symbolic_counts(a, b, (2, 2, 2), mask=m_host), inputs,
+            ppm, PlanSpec(mask=m_host), PlanFloors(),
+        )
+        assert host_plan.num_batches == dev_plan.num_batches
+        assert host_plan.caps == dev_plan.caps
+        assert host_plan.sel_cap == dev_plan.sel_cap
+        assert host_plan.mask_sel_cap == dev_plan.mask_sel_cap
+        assert host_plan.local_path == dev_plan.local_path
+        assert host_plan.total_flops == dev_plan.total_flops
+
+    # default-scatter capacity parity (the from_host sizing rule)
+    inputs = PlanInputs.from_host(a, b, (2, 2, 2))
+    assert inputs.cap_a == A.cap and inputs.cap_b == B.cap, (
+        inputs.cap_a, A.cap, inputs.cap_b, B.cap)
+    print("OK tune_oracle_parity")
+
+
 def _collect_cases():
     return {
         name[len("case_"):]: fn

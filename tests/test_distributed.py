@@ -27,6 +27,7 @@ CASES = [
     "pipelined_overflow_retry",
     "rectangular_aat",
     "ring_schedule_matches",
+    "tune_oracle_parity",
 ]
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

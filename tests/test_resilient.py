@@ -22,6 +22,7 @@ import pytest
 from repro.core import summa3d
 from repro.core.batched import RunReport, batched_summa3d, plan_batches
 from repro.core.distsparse import gather_to_global, scatter_to_grid
+from repro.core.specs import ExecSpec, PlanSpec
 from repro.core.grid import make_grid
 from repro.core.sparse import from_numpy_coo
 from repro.runtime.driver import StragglerEwma
@@ -227,7 +228,7 @@ class TestGracefulDegradation:
         a = scatter_to_grid(A, grid1, "A")
         b = scatter_to_grid(A, grid1, "B")
         ref_plan = plan_batches(a, b, grid1, per_process_memory=1 << 30,
-                                slack=1.0)
+                                spec=PlanSpec(slack=1.0, local_path="esc"))
         inputs = 12 * (int(np.asarray(a.nnz).max())
                        + int(np.asarray(b.nnz).max()))
         budget = inputs + 12 * ref_plan.caps.flops_cap // 4
@@ -235,7 +236,7 @@ class TestGracefulDegradation:
         res = batched_summa3d(
             a, b, grid1, per_process_memory=budget,
             consumer=lambda bi, cb, cm: outs.setdefault(bi, (cb, cm)),
-            slack=0.05, max_retries=12,
+            spec=PlanSpec(slack=0.05), exec_spec=ExecSpec(max_retries=12),
         )
         assert res.report.ladder_blocked > 0
         assert res.report.replans > 0
@@ -265,7 +266,8 @@ class TestGracefulDegradation:
         res = batched_summa3d(
             a, b, grid1, per_process_memory=1 << 26,
             consumer=lambda bi, cb, cm: outs.setdefault(bi, (cb, cm)),
-            slack=0.05, max_retries=12, degrade=False,
+            spec=PlanSpec(slack=0.05),
+            exec_spec=ExecSpec(max_retries=12, degrade=False),
         )
         assert res.report.ladder_blocked == 0
         assert res.report.degraded_batches == ()

@@ -1,0 +1,209 @@
+"""Fast-lane tests for the cost model + autotuner (``repro.tune``).
+
+Host-math heavy, single device: the host symbolic oracle reproduces the
+device pass (bit-for-bit counts and an identical plan on the 1×1×1 grid —
+the 2×2×2 parity case lives in the 8-device slow lane), the cost model's
+predictions for the CHECKED-IN ``BENCH_summa3d.json`` pipelined rows land
+inside ``ACCEPT_BAND`` after the one-scalar overhead fit, the autotuner
+never returns a config the model prices worse than the untouched defaults,
+the R-MAT skew case picks a measurably cheaper config (fewer comm bytes or
+batches) than the fixed heuristics, and a ``TunedConfig`` drives the serve
+engine's admission path end to end with plan-cache hits on repeat traffic.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import gen
+from repro.core import summa3d
+from repro.core.batched import (
+    PlanInputs,
+    plan_batches,
+    plan_from_symbolic,
+    symbolic3d_counts,
+)
+from repro.core.distsparse import scatter_to_grid
+from repro.core.grid import make_grid
+from repro.core.specs import PlanFloors, PlanSpec
+from repro.core.symbolic import host_symbolic_counts
+from repro.serve import MultiplyRequest, ServeConfig, SpgemmEngine
+from repro.tune import (
+    ACCEPT_BAND,
+    autotune,
+    candidate_grids,
+    fit_overhead,
+    predict_cost,
+)
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+# the exact workload run_summa3d_suite times (seeds, grid, forced batches)
+BENCH_SCALE, BENCH_EF, BENCH_NB = 8, 8, 32
+BENCH_GRID = (2, 2, 2)
+BENCH_PPM = 1 << 30
+# bench config name -> the PlanSpec.local_path it pins
+PIPELINED_VARIANTS = {
+    "pipelined": "auto",
+    "pipelined_esc": "esc",
+    "pipelined_binned": "binned",
+    "pipelined_hash": "hash",
+}
+
+
+def _bench_pair():
+    return (gen.rmat(scale=BENCH_SCALE, edge_factor=BENCH_EF, seed=3),
+            gen.rmat(scale=BENCH_SCALE, edge_factor=BENCH_EF, seed=4))
+
+
+def _bench_plan(a, b, path):
+    counts = host_symbolic_counts(a, b, BENCH_GRID)
+    inputs = PlanInputs.from_host(a, b, BENCH_GRID)
+    plan = plan_from_symbolic(
+        counts, inputs, BENCH_PPM,
+        PlanSpec(local_path=path, force_num_batches=BENCH_NB), PlanFloors(),
+    )
+    return plan, inputs
+
+
+class TestHostOracle:
+    def test_counts_match_device_pass(self):
+        grid = make_grid(1, 1, 1)
+        a = gen.erdos_renyi(64, 5.0, seed=7)
+        b = gen.erdos_renyi(64, 5.0, seed=8)
+        A = scatter_to_grid(a, grid, "A")
+        B = scatter_to_grid(b, grid, "B")
+        dev = symbolic3d_counts(A, B, grid)
+        host = host_symbolic_counts(a, b, (1, 1, 1))
+        np.testing.assert_array_equal(np.asarray(dev.percol), host.percol)
+        np.testing.assert_array_equal(
+            np.asarray(dev.b_colcounts), host.b_colcounts)
+        np.testing.assert_array_equal(
+            np.asarray(dev.a_kcounts), host.a_kcounts)
+        np.testing.assert_array_equal(
+            np.asarray(dev.b_kcounts), host.b_kcounts)
+        assert dev.mask_colcounts is None and host.mask_colcounts is None
+
+    def test_plan_matches_device_plan(self):
+        grid = make_grid(1, 1, 1)
+        a = gen.erdos_renyi(64, 5.0, seed=9)
+        b = gen.erdos_renyi(64, 5.0, seed=10)
+        A = scatter_to_grid(a, grid, "A")
+        B = scatter_to_grid(b, grid, "B")
+        ppm = 1 << 22
+        dev = plan_batches(A, B, grid, per_process_memory=ppm,
+                           spec=PlanSpec())
+        host = plan_from_symbolic(
+            host_symbolic_counts(a, b, (1, 1, 1)),
+            PlanInputs.from_host(a, b, (1, 1, 1)),
+            ppm, PlanSpec(), PlanFloors(),
+        )
+        assert host.num_batches == dev.num_batches
+        assert host.caps == dev.caps
+        assert host.sel_cap == dev.sel_cap
+        assert host.local_path == dev.local_path
+        assert host.total_flops == dev.total_flops
+        np.testing.assert_array_equal(host.per_batch_flops,
+                                      dev.per_batch_flops)
+
+
+class TestCostModelBand:
+    def test_checked_in_pipelined_rows_within_band(self):
+        """Acceptance criterion: for every pipelined BENCH_summa3d.json
+        driver row, predicted/measured stays inside the fixed band after
+        the single-scalar overhead fit."""
+        path = REPO / "BENCH_summa3d.json"
+        if not path.exists():
+            pytest.skip("no checked-in BENCH_summa3d.json")
+        rows = json.loads(path.read_text())["rows"]
+        measured = {
+            r["variant"]: r["wall_ms"] for r in rows
+            if r.get("op") == "driver_e2e" and r["variant"] in
+            PIPELINED_VARIANTS
+        }
+        assert set(measured) == set(PIPELINED_VARIANTS)
+        a, b = _bench_pair()
+        pairs, raw = [], {}
+        for variant, lpath in PIPELINED_VARIANTS.items():
+            plan, inputs = _bench_plan(a, b, lpath)
+            pred = predict_cost(plan, BENCH_GRID, inputs.nnz_a,
+                                inputs.nnz_b)
+            raw[variant] = pred.total_ms
+            pairs.append((pred.total_ms, measured[variant]))
+        coeffs = fit_overhead(pairs)
+        lo, hi = ACCEPT_BAND
+        for variant in PIPELINED_VARIANTS:
+            ratio = coeffs.overhead * raw[variant] / measured[variant]
+            assert lo <= ratio <= hi, (variant, ratio)
+
+
+class TestAutotune:
+    def test_candidate_grids_divisibility(self):
+        grids = candidate_grids((256, 256), (256, 256), 8)
+        assert (2, 2, 2) in grids and (1, 1, 1) in grids
+        for pr, pc, l in grids:
+            assert pr == pc and pr * pc * l <= 8
+            assert 256 % pr == 0 and 256 % (pc * l) == 0
+        # odd shapes prune non-dividing grids (no l=4 layer split of k=6,
+        # no 3×3 side of 8 devices)
+        assert candidate_grids((6, 6), (6, 6), 8) == (
+            (1, 1, 1), (1, 1, 2), (1, 1, 3), (1, 1, 6), (2, 2, 1))
+
+    def test_never_worse_than_defaults(self):
+        a, b = _bench_pair()
+        for budget in (1 << 30, 200_000, 80_000, 40_000):
+            t = autotune(a, b, budget, num_devices=8)
+            assert t.predicted.total_ms <= t.baseline_predicted.total_ms, (
+                budget, t.predicted, t.baseline_predicted)
+
+    def test_rmat_skew_beats_fixed_heuristics(self):
+        """Acceptance criterion: on the R-MAT skew case under a constrained
+        budget the tuner picks a config that is measurably cheaper than the
+        fixed defaults — strictly fewer transfer bytes (it drops the fiber
+        exchange by choosing fewer layers) or strictly fewer batches."""
+        a, b = _bench_pair()
+        t = autotune(a, b, 80_000, num_devices=8)
+        assert t.predicted.total_ms <= t.baseline_predicted.total_ms
+        assert (t.predicted.comm_bytes < t.baseline_predicted.comm_bytes
+                or t.num_batches < t.baseline_num_batches), t.to_meta()
+        # deterministic: same inputs, same pick
+        t2 = autotune(a, b, 80_000, num_devices=8)
+        assert t2.grid_shape == t.grid_shape
+        assert t2.spec == t.spec and t2.floors == t.floors
+
+    def test_tuned_config_is_spec_api(self):
+        a, b = _bench_pair()
+        t = autotune(a, b, 200_000, num_devices=8)
+        assert isinstance(t.spec, PlanSpec)
+        assert isinstance(t.floors, PlanFloors)
+        assert t.floors.num_batches == t.num_batches
+        assert t.spec.local_path in ("esc", "binned", "hash")
+        meta = json.loads(json.dumps(t.to_meta()))  # JSON-safe
+        assert meta["grid_shape"] == list(t.grid_shape)
+        assert PlanFloors.from_meta(meta["floors"]) == t.floors
+
+    def test_infeasible_budget_raises(self):
+        a, b = _bench_pair()
+        with pytest.raises(MemoryError):
+            autotune(a, b, 64, num_devices=8)
+
+
+class TestServeFromTuned:
+    def test_tuned_drives_admission_with_cache_hits(self):
+        a = gen.erdos_renyi(64, 4.0, seed=30)
+        b = gen.erdos_renyi(64, 4.0, seed=31)
+        t = autotune(a, b, 1 << 24, num_devices=1)
+        assert t.grid_shape == (1, 1, 1)
+        cfg = ServeConfig.from_tuned(t)
+        assert cfg.local_path == t.spec.local_path
+        assert cfg.seed_floors == t.floors
+        eng = SpgemmEngine(make_grid(1, 1, 1), cfg)
+        eng.submit(MultiplyRequest(rid=0, a=a, b=b))
+        eng.run_to_completion()
+        t0 = summa3d.TRACE_COUNTS["fused_step"]
+        eng.submit(MultiplyRequest(rid=1, a=a, b=b))
+        results = eng.run_to_completion()
+        repeat = [r for r in results if r.rid == 1][0]
+        assert repeat.status == "ok" and repeat.plan_cached
+        assert summa3d.TRACE_COUNTS["fused_step"] - t0 == 0
