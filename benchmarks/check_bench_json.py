@@ -74,6 +74,27 @@ SUITE_ROWS = {
             "never_worse_all", "skew_cheaper",
         ),
     },
+    "graph_masked": {
+        ("summary", "masked_vs_unmasked"): (
+            "batches_masked", "batches_unmasked", "d_cap_masked",
+            "d_cap_unmasked", "masked_below_unmasked",
+        ),
+        # structure-aware placement acceptance: degree-spread must plan
+        # strictly fewer capacity-padded transfer bytes than block-cyclic
+        ("placement", "block_cyclic"): (
+            "batches", "sel_cap", "piece_cap", "all_to_all_bytes",
+            "gather_bytes", "padded_bytes",
+        ),
+        ("placement", "degree"): (
+            "batches", "sel_cap", "piece_cap", "all_to_all_bytes",
+            "gather_bytes", "padded_bytes",
+        ),
+        ("summary", "placement_volume"): (
+            "batches_block_cyclic", "batches_degree",
+            "padded_bytes_block_cyclic", "padded_bytes_degree",
+            "volume_reduction", "degree_below_block_cyclic",
+        ),
+    },
     "serve_engine": {
         ("serve_e2e", "open_loop"): (
             "p50_ms", "p99_ms", "multiplies_per_s", "requests",

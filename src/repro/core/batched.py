@@ -67,6 +67,7 @@ from .summa3d import (
     summa3d_fused_step,
     summa3d_sparse_step,
 )
+from .placement import BLOCK_CYCLIC, Placement
 from .sparse import hstack_remap
 from .specs import ExecSpec, PlanFloors, PlanSpec, resolve_specs
 from .symbolic import (
@@ -76,9 +77,7 @@ from .symbolic import (
     SymbolicCounts,
     batch_count,
     batch_count_lower_bound,
-    batching_plan_columns,
     estimate_mem_c_bytes,
-    fold_block_cyclic,
     plan_k_bins,
     rup8 as _rup8,
     rup_pow2 as _rup_pow2,
@@ -128,7 +127,7 @@ def _symbolic3d_jit(
     vector, so masked planning never round-trips the mask's structure
     through the host (ROADMAP carry-over (d))."""
     _, tn_b = b.tile_shape
-    _, wl_a = a.tile_shape
+    wl_b, _ = b.tile_shape
 
     def step(a_t: DistSparse, b_t: DistSparse, *rest):
         a_loc = _squeeze_tile(a_t)
@@ -144,11 +143,12 @@ def _symbolic3d_jit(
         cc_all_pad = jnp.concatenate(
             [cc_all, jnp.zeros((cc_all.shape[0], 1), jnp.int32)], axis=1
         )
-        # B entries in OUR tile: contraction index = i_own*wl + local row
-        # (matches _gather_B indexing)
+        # B entries in OUR tile: contraction index = i_own*wl_b + local row
+        # (matches _gather_B indexing — the stride is B's OWN tile row
+        # count, which equals A's tile width only on square layer grids)
         i_own = lax.axis_index(ROW_AX)
         valid = b_loc.valid_mask()
-        k_idx = jnp.where(valid, b_loc.rows + i_own * wl_a, k_tot)
+        k_idx = jnp.where(valid, b_loc.rows + i_own * wl_b, k_tot)
         contrib = cc_all_pad[:, k_idx]  # (pr, capB): per target row block
         contrib = jnp.where(valid[None, :], contrib, 0)
         segids = jnp.where(valid, b_loc.cols, tn_b)
@@ -459,6 +459,9 @@ def plan_from_symbolic(
             f"memory ({per_process_memory})"
         )
     per_process_memory = per_process_memory - reserved_bytes
+    # pluggable tile→batch distribution: every fold below routes through it
+    # (BLOCK_CYCLIC delegates to the historical fold_block_cyclic math)
+    dist = spec.distribution if spec.distribution is not None else BLOCK_CYCLIC
     percol = counts.percol  # (pr, pc, l, tn_b)
     pr, pc, l, tn_b = percol.shape
     masked = counts.mask_colcounts is not None and not mask_complement
@@ -512,22 +515,22 @@ def plan_from_symbolic(
             ),
             num_batches_floor,
         )
-    nb = batching_plan_columns(tn_b, nb, l)
+    nb = dist.round_batches(tn_b, nb, l)
 
-    # per-(process, batch, piece) flops via the block-cyclic fold
-    flops_pbp = fold_block_cyclic(percol, nb, l)  # (pr,pc,l,nb,l)
+    # per-(process, batch, piece) flops via the distribution's fold
+    flops_pbp = dist.fold(percol, nb, l)  # (pr,pc,l,nb,l)
     per_batch_proc = flops_pbp.sum(axis=-1)  # (pr,pc,l,nb)
     max_batch_flops = int(per_batch_proc.max())
     # D-tile bounds come from the mask-filtered counts (the filter runs
     # before the compress, so survivors alone occupy the static buffers)
-    d_pbp = fold_block_cyclic(merged_d_percol, nb, l)
+    d_pbp = dist.fold(merged_d_percol, nb, l)
     max_batch_d = int(d_pbp.sum(axis=-1).max())
     max_piece_flops = int(d_pbp.max())
     # merged C piece bound: sum over source layers, mask-capped per column
     merged_col = percol.sum(axis=2)  # (pr, pc, tn_b)
     if masked:
         merged_col = np.minimum(merged_col, mcount)
-    merged_piece = fold_block_cyclic(merged_col, nb, l).max()
+    merged_piece = dist.fold(merged_col, nb, l).max()
 
     wb = tn_b // nb
     flops_cap = _rup8(max(int(max_batch_flops * slack), 64))
@@ -539,20 +542,17 @@ def plan_from_symbolic(
     caps = BatchCaps(flops_cap=flops_cap, d_cap=d_cap, piece_cap=piece_cap, c_cap=c_cap)
 
     # exact per-batch selection capacity: max over (process, batch) of the
-    # number of B entries the block-cyclic selection keeps — from the
+    # number of B entries the distribution's selection keeps — from the
     # symbolic B-column counts, so the first batch can never trigger a
     # spurious selection retry on skewed inputs.
-    sel_per_batch = fold_block_cyclic(counts.b_colcounts, nb, l).sum(axis=-1)
+    sel_per_batch = dist.fold(counts.b_colcounts, nb, l).sum(axis=-1)
     sel_cap = min(_rup8(max(int(sel_per_batch.max()), 8)), inputs.cap_b)
 
     # exact per-batch mask-slice capacity: batch bi selects the contiguous
     # local columns [bi·wbl, (bi+1)·wbl) of every mask tile.
     mask_sel_cap = 0
     if counts.mask_colcounts is not None:
-        wbl = tn_b // (nb * l)
-        per_batch_mask = counts.mask_colcounts.reshape(
-            pr, pc, l, nb, wbl
-        ).sum(axis=-1)
+        per_batch_mask = dist.fold_batch_slices(counts.mask_colcounts, nb)
         mask_sel_cap = min(
             _rup8(max(int(per_batch_mask.max()), 8)), inputs.cap_mask
         )
@@ -670,26 +670,10 @@ def batch_column_map(n: int, grid: Grid, num_batches: int, batch: int) -> np.nda
 
     Returns g[j, k, c] of shape (pc, l, wb/l): the global column of local
     column c in C tile (:, j, k) for this batch. Inverse of the block-cyclic
-    selection + fiber split.
+    selection + fiber split (delegates to the distribution object — the
+    triple-loop reference lives in the placement contract tests).
     """
-    pc, l = grid.pc, grid.l
-    w = n // pc
-    wb = w // num_batches
-    wbl = w // (num_batches * l)
-    out = np.zeros((pc, l, wb // l), np.int64)
-    for j in range(pc):
-        for k in range(l):
-            for c in range(wb // l):
-                # C tile layer k holds fiber piece k = D cols [k*wb/l,(k+1)*wb/l)
-                d_col = k * (wb // l) + c
-                # D batch cols remap: block t = d_col // wbl (t-th block of the
-                # batch), within = d_col % wbl; original local block index =
-                # t * num_batches + batch
-                t = d_col // wbl
-                within = d_col % wbl
-                orig_local = (t * num_batches + batch) * wbl + within
-                out[j, k, c] = j * w + orig_local
-    return out
+    return BLOCK_CYCLIC.batch_column_map(n, grid.pc, grid.l, num_batches, batch)
 
 
 # ---------------------------------------------------------------------------
@@ -941,6 +925,22 @@ def batched_summa3d(
         spec, floors, exec_spec, legacy, default_local_path="auto",
         where="batched_summa3d",
     )
+    placement = spec.placement
+    if placement is not None and not isinstance(placement, Placement):
+        raise ValueError(
+            f"spec.placement must be a core.placement.Placement whose "
+            f"permutations the operands ALREADY carry, got {placement!r} — "
+            f"use placement.multiply_placed (or compute_placement + "
+            f"apply_a/apply_b) to permute host operands before scattering"
+        )
+    if spec.distribution is not None and (
+        getattr(spec.distribution, "name", None) != BLOCK_CYCLIC.name
+    ):
+        raise ValueError(
+            f"the fused device step implements only the block-cyclic "
+            f"distribution; got {spec.distribution!r}. Custom Distribution "
+            f"objects are planner-side — price them via plan_from_symbolic."
+        )
     r_bytes, slack = spec.r_bytes, spec.slack
     reserved_bytes = spec.reserved_bytes
     mask, mask_complement = spec.mask, spec.mask_complement
@@ -1213,16 +1213,24 @@ def batched_summa3d(
             except _LadderBlocked:
                 c_batch = run_batch_degraded(bi)
             c_post = post(bi, c_batch)
-        col_map = batch_column_map(n_cols, grid, nb, bi)
+        col_map = _col_map(bi)
         consumed.append(consumer(bi, c_post, col_map))
+
+    def _col_map(bi: int) -> np.ndarray:
+        col_map = batch_column_map(n_cols, grid, nb, bi)
+        if placement is not None:
+            # operands are permuted: hand consumers ORIGINAL column ids so
+            # downstream reassembly never sees placement space (rows stay
+            # permuted — multiply_placed inverts them after collection)
+            col_map = placement.original_cols(col_map)
+        return col_map
 
     if not pipelined:
         for bi in range(nb):
             c_batch = post(
                 bi, run_batch_guarded(bi, caps, sel_cap, kb, hc, mask_cap)
             )
-            col_map = batch_column_map(n_cols, grid, nb, bi)
-            consumed.append(consumer(bi, c_batch, col_map))
+            consumed.append(consumer(bi, c_batch, _col_map(bi)))
     else:
         # deferred import: runtime.resilient imports this module (RunReport)
         from ..runtime.driver import LookaheadWindow

@@ -46,8 +46,11 @@ class Grid:
 
 
 def make_grid(pr: int, pc: int, l: int, devices: Optional[Sequence] = None) -> Grid:
-    """Build a pr×pc×l grid mesh. Requires pr == pc (paper: square layers)."""
-    assert pr == pc, f"paper assumes square per-layer grids, got {pr}x{pc}"
+    """Build a pr×pc×l grid mesh. Layers must be square (pr == pc) or the
+    grid single-layer (l == 1): rectangular per-layer grids only align the
+    contraction slices when there is one layer (see host_symbolic_counts)."""
+    assert pr == pc or l == 1, \
+        f"need square per-layer grids or l == 1, got {pr}x{pc}x{l}"
     ndev = pr * pc * l
     if devices is None:
         devices = jax.devices()[:ndev]

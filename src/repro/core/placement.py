@@ -1,0 +1,430 @@
+"""Structure-aware placement: pluggable distributions + permutation passes.
+
+The paper's block-cyclic distribution (Fig. 1(i)) treats every nonzero
+alike; hypergraph-partitioning work (Ballard et al., PAPERS.md) shows the
+communication volume drops when the data distribution follows the sparsity
+structure. This module adds both halves of that direction:
+
+  * ``Distribution`` — the tile→batch distribution as a pluggable object.
+    The planner (``batched.plan_from_symbolic``) routes every fold/round
+    call through ``PlanSpec.distribution`` (default: the ``BLOCK_CYCLIC``
+    singleton, bit-for-bit the old ``symbolic.fold_block_cyclic`` math), so
+    hypergraph-quality distributions can slot in later without touching the
+    planner. Only block-cyclic is device-executable today — the fused step's
+    ``SparseCOO.select_cols_blockcyclic`` hardcodes it — so
+    ``batched_summa3d`` rejects other distributions at the door.
+
+  * ``Placement`` — a (row, contraction, column) permutation computed from
+    the same per-row/column counts the symbolic pass already extracts
+    (degree-spread and reverse-Cuthill–McKee orderings first, pluggable
+    like the distributions). Operands are permuted BEFORE ``plan_batches``
+    — so every aligned block-cyclic block sees a uniform degree mixture and
+    the capacity-padded transfers (selection gather at ``sel_cap``, fiber
+    all_to_all at ``piece_cap``) shrink on skewed inputs — and the output
+    is mapped back through the inverse permutations, so the result is
+    identical to the unpermuted run (property-tested across semirings,
+    masks, and all three local paths).
+
+Degree-SPREAD, not degree-sort: sorting by degree concentrates the R-MAT
+hubs into one aligned block (strictly worse maxima). The heavy columns are
+instead dealt onto bit-reversed positions (power-of-two sizes) or
+golden-ratio low-discrepancy positions, so consecutive hubs land in
+different blocks of every (batch, layer) split the planner might choose.
+
+``multiply_placed`` is the end-to-end entry: permute → scatter →
+``batched_summa3d`` → invert, returning global host triplets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .sparse import from_numpy_coo
+from .symbolic import batching_plan_columns, fold_block_cyclic
+
+
+def _host_triplets(a):
+    """(rows, cols, vals) of the live entries of a host COO (duck-typed)."""
+    nnz = int(a.nnz)
+    return (
+        np.asarray(a.rows[:nnz]).astype(np.int64),
+        np.asarray(a.cols[:nnz]).astype(np.int64),
+        np.asarray(a.vals[:nnz]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pluggable tile→batch distributions
+# ---------------------------------------------------------------------------
+class Distribution:
+    """Contract for a tile→batch column distribution (planner-side math).
+
+    A distribution decides how the ``n`` local B/C columns split into
+    ``num_batches × num_layers`` pieces — every capacity the planner derives
+    is a fold of per-column count vectors through this object, and every
+    consumer-facing column map is its inverse. Implementations must keep
+    ``fold``/``batch_column_map`` consistent: ``fold`` sums exactly the
+    columns ``batch_column_map`` reports for each (batch, piece).
+    """
+
+    name: str = "abstract"
+
+    def round_batches(self, n: int, num_batches: int, num_layers: int) -> int:
+        """Smallest feasible batch count >= ``num_batches`` for n columns."""
+        raise NotImplementedError
+
+    def fold(
+        self, percol: np.ndarray, num_batches: int, num_layers: int
+    ) -> np.ndarray:
+        """Fold (..., n) per-column vectors into (..., batch, piece) sums."""
+        raise NotImplementedError
+
+    def fold_batch_slices(
+        self, colcounts: np.ndarray, num_batches: int
+    ) -> np.ndarray:
+        """Fold (..., wl) C-layout per-column counts into (..., batch) sums
+        — the mask-slice selection each batch performs on C-layout tiles."""
+        raise NotImplementedError
+
+    def batch_column_map(
+        self, n: int, pc: int, num_layers: int, num_batches: int, batch: int
+    ) -> np.ndarray:
+        """(pc, l, wb/l) global column of each C-tile local column."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCyclicDistribution(Distribution):
+    """The paper's Fig. 1(i) block-cyclic split — the device-executable
+    default (``SparseCOO.select_cols_blockcyclic`` implements the same
+    mapping in the fused step). Block ``t`` of width ``n/(b·l)`` belongs to
+    batch ``t % b`` and fiber piece ``t // b``; the planner-side folds
+    delegate to ``symbolic.fold_block_cyclic`` / ``batching_plan_columns``
+    so the pluggable default stays bit-identical to the historical math
+    (contract-tested)."""
+
+    name: str = "block_cyclic"
+
+    def round_batches(self, n: int, num_batches: int, num_layers: int) -> int:
+        return batching_plan_columns(n, num_batches, num_layers)
+
+    def fold(
+        self, percol: np.ndarray, num_batches: int, num_layers: int
+    ) -> np.ndarray:
+        return fold_block_cyclic(percol, num_batches, num_layers)
+
+    def fold_batch_slices(
+        self, colcounts: np.ndarray, num_batches: int
+    ) -> np.ndarray:
+        *lead, wl = colcounts.shape
+        wbl = wl // num_batches
+        assert wbl * num_batches == wl, (wl, num_batches)
+        return colcounts.reshape(*lead, num_batches, wbl).sum(axis=-1)
+
+    def batch_column_map(
+        self, n: int, pc: int, num_layers: int, num_batches: int, batch: int
+    ) -> np.ndarray:
+        l = num_layers
+        w = n // pc
+        wb = w // num_batches
+        wbl = w // (num_batches * l)
+        # C tile layer k holds fiber piece k = D cols [k·wb/l, (k+1)·wb/l);
+        # D batch col d_col sits in block t = d_col // wbl at offset
+        # d_col % wbl, and block t is the (t·b + batch)-th original block.
+        k = np.arange(l, dtype=np.int64)[:, None]
+        c = np.arange(wb // l, dtype=np.int64)[None, :]
+        d_col = k * (wb // l) + c
+        orig_local = (d_col // wbl * num_batches + batch) * wbl + d_col % wbl
+        j = np.arange(pc, dtype=np.int64)[:, None, None]
+        return j * w + orig_local[None]
+
+
+#: planner default — `PlanSpec.distribution=None` resolves to this singleton
+BLOCK_CYCLIC = BlockCyclicDistribution()
+
+
+# ---------------------------------------------------------------------------
+# Permutation passes
+# ---------------------------------------------------------------------------
+def _invert(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0], dtype=perm.dtype)
+    return inv
+
+
+def _spread_positions(n: int) -> np.ndarray:
+    """A low-discrepancy permutation of ``range(n)``: consecutive ranks land
+    far apart, so dealing a degree-sorted order onto these positions gives
+    every aligned block (any width dividing n) a uniform degree mixture.
+    Power-of-two sizes use bit reversal; others the golden-ratio sequence."""
+    if n > 0 and n & (n - 1) == 0:
+        bits = n.bit_length() - 1
+        pos = np.arange(n, dtype=np.int64)
+        rev = np.zeros(n, np.int64)
+        for i in range(bits):
+            rev |= ((pos >> i) & 1) << (bits - 1 - i)
+        return rev
+    phi = (np.sqrt(5.0) - 1.0) / 2.0
+    frac = (np.arange(n, dtype=np.float64) * phi) % 1.0
+    rank = np.empty(n, np.int64)
+    rank[np.argsort(frac, kind="stable")] = np.arange(n, dtype=np.int64)
+    return rank
+
+
+def _degree_spread_perm(counts: np.ndarray) -> np.ndarray:
+    """new_index = perm[old_index]: heaviest indices first, dealt onto
+    spread positions (NOT packed together — see module docstring)."""
+    n = counts.shape[0]
+    order = np.argsort(-np.asarray(counts, np.int64), kind="stable")
+    perm = np.empty(n, np.int64)
+    perm[order] = _spread_positions(n)
+    return perm
+
+
+def _rcm_order(n: int, rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
+    """Reverse Cuthill–McKee over the symmetrized pattern: BFS from a
+    minimum-degree vertex, neighbors visited in increasing-degree order,
+    result reversed — the classic cheap bandwidth-reducing ordering."""
+    r = np.concatenate([rows, cols])
+    c = np.concatenate([cols, rows])
+    keep = r != c
+    key = np.unique(r[keep] * n + c[keep])
+    r, c = key // n, key % n  # grouped by row, neighbor cols ascending
+    deg = np.bincount(r, minlength=n)
+    indptr = np.zeros(n + 1, np.int64)
+    indptr[1:] = np.cumsum(deg)
+    order = np.empty(n, np.int64)
+    visited = np.zeros(n, bool)
+    pos = 0
+    q = deque()
+    for s in np.argsort(deg, kind="stable"):
+        if visited[s]:
+            continue
+        visited[s] = True
+        q.append(int(s))
+        while q:
+            v = q.popleft()
+            order[pos] = v
+            pos += 1
+            nbrs = c[indptr[v]:indptr[v + 1]]
+            nbrs = nbrs[~visited[nbrs]]
+            nbrs = nbrs[np.argsort(deg[nbrs], kind="stable")]
+            visited[nbrs] = True
+            q.extend(int(x) for x in nbrs)
+    return order[::-1].copy()
+
+
+@dataclasses.dataclass(eq=False)
+class Placement:
+    """A (row, contraction, column) permutation triple, ``new = perm[old]``.
+
+    ``apply_a``/``apply_b``/``apply_mask`` permute host COO operands into
+    placement space (A: rows by ``row_perm``, cols by ``k_perm``; B: rows by
+    ``k_perm``, cols by ``col_perm``; mask: C layout); ``original_rows`` /
+    ``original_cols`` map result coordinates back. ``eq=False``: the object
+    hashes by identity so it can ride the frozen ``PlanSpec``.
+    """
+
+    strategy: str
+    row_perm: np.ndarray  # (m,)
+    k_perm: np.ndarray  # (k,)
+    col_perm: np.ndarray  # (n,)
+
+    def __post_init__(self):
+        self.row_inv = _invert(np.asarray(self.row_perm, np.int64))
+        self.k_inv = _invert(np.asarray(self.k_perm, np.int64))
+        self.col_inv = _invert(np.asarray(self.col_perm, np.int64))
+
+    @classmethod
+    def identity(cls, m: int, k: int, n: int) -> "Placement":
+        ar = np.arange
+        return cls("identity", ar(m, dtype=np.int64), ar(k, dtype=np.int64),
+                   ar(n, dtype=np.int64))
+
+    @property
+    def is_identity(self) -> bool:
+        return all(
+            np.array_equal(p, np.arange(p.shape[0]))
+            for p in (self.row_perm, self.k_perm, self.col_perm)
+        )
+
+    def apply_a(self, a):
+        rows, cols, vals = _host_triplets(a)
+        return from_numpy_coo(
+            self.row_perm[rows], self.k_perm[cols], vals, a.shape, cap=a.cap
+        )
+
+    def apply_b(self, b):
+        rows, cols, vals = _host_triplets(b)
+        return from_numpy_coo(
+            self.k_perm[rows], self.col_perm[cols], vals, b.shape, cap=b.cap
+        )
+
+    def apply_mask(self, mask):
+        rows, cols, vals = _host_triplets(mask)
+        return from_numpy_coo(
+            self.row_perm[rows], self.col_perm[cols], vals, mask.shape,
+            cap=mask.cap,
+        )
+
+    def original_rows(self, rows) -> np.ndarray:
+        """Map permuted global row coordinates back to the original ones."""
+        return self.row_inv[np.asarray(rows)]
+
+    def original_cols(self, cols) -> np.ndarray:
+        return self.col_inv[np.asarray(cols)]
+
+
+def compute_placement(a, b, strategy: str = "degree", mask=None) -> Placement:
+    """Compute a :class:`Placement` for ``a @ b`` from structure alone.
+
+    Strategies (pluggable — hypergraph-quality orderings slot in as new
+    names): ``"identity"`` (no-op), ``"degree"`` (degree-spread each of the
+    three index spaces independently from exact per-row/column counts — the
+    same count vectors the symbolic pass extracts), ``"rcm"`` (reverse
+    Cuthill–McKee over A's symmetrized pattern, square operands only, one
+    shared ordering for rows/contraction/columns). ``mask`` counts are
+    folded into the column degrees when given, so a masked multiply spreads
+    the surviving structure, not the raw product's.
+    """
+    m, k = a.shape
+    k_b, n = b.shape
+    assert k == k_b, (a.shape, b.shape)
+    if strategy == "identity":
+        return Placement.identity(m, k, n)
+    ar, ac, _ = _host_triplets(a)
+    br, bc, _ = _host_triplets(b)
+    if strategy == "degree":
+        col_deg = np.bincount(bc, minlength=n)
+        if mask is not None:
+            mr, mc, _ = _host_triplets(mask)
+            col_deg = col_deg + np.bincount(mc, minlength=n)
+        return Placement(
+            strategy="degree",
+            row_perm=_degree_spread_perm(np.bincount(ar, minlength=m)),
+            k_perm=_degree_spread_perm(
+                np.bincount(ac, minlength=k) + np.bincount(br, minlength=k)
+            ),
+            col_perm=_degree_spread_perm(col_deg),
+        )
+    if strategy == "rcm":
+        if not (m == k == n):
+            raise ValueError(
+                f"rcm placement needs square aligned operands, got "
+                f"{a.shape} x {b.shape}"
+            )
+        order = _rcm_order(n, ar, ac)
+        perm = np.empty(n, np.int64)
+        perm[order] = np.arange(n, dtype=np.int64)
+        return Placement(
+            strategy="rcm", row_perm=perm, k_perm=perm.copy(),
+            col_perm=perm.copy(),
+        )
+    raise ValueError(
+        f"unknown placement strategy {strategy!r} "
+        f"(known: identity, degree, rcm)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# End-to-end placed multiply
+# ---------------------------------------------------------------------------
+def _batch_to_global(c, col_map) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side reassembly of one sparse C batch into global coordinates
+    (local twin of the mcl helper — core must not import sparse_apps)."""
+    pr, pc, l = c.grid_shape
+    tm, _ = c.tile_shape
+    R = np.asarray(c.rows)
+    C = np.asarray(c.cols)
+    V = np.asarray(c.vals)
+    N = np.asarray(c.nnz)
+    cap = R.shape[-1]
+    valid = np.arange(cap)[None, None, None, :] < N[..., None]
+    i, j, k, s = np.nonzero(valid)
+    return i * tm + R[i, j, k, s], col_map[j, k, C[i, j, k, s]], V[i, j, k, s]
+
+
+@dataclasses.dataclass
+class PlacedResult:
+    """Global host COO triplets of a placed multiply, row-major sorted, in
+    ORIGINAL (unpermuted) coordinates. Entry coordinates are unique (the
+    driver merges within batches; batches and tiles cover disjoint output
+    regions), so ``to_dense`` assigns rather than accumulates — exact for
+    every semiring."""
+
+    rows: np.ndarray
+    cols: np.ndarray
+    vals: np.ndarray
+    shape: Tuple[int, int]
+    placement: Placement
+    result: object  # the BatchedResult of the underlying driver run
+
+    def to_dense(self, fill: float = 0.0) -> np.ndarray:
+        out = np.full(self.shape, fill, dtype=self.vals.dtype)
+        out[self.rows, self.cols] = self.vals
+        return out
+
+
+def multiply_placed(
+    a,
+    b,
+    grid,
+    per_process_memory: int,
+    *,
+    strategy: str = "degree",
+    placement: Optional[Placement] = None,
+    mask=None,
+    semiring=None,
+    spec=None,
+    floors=None,
+    exec_spec=None,
+) -> PlacedResult:
+    """Permute → scatter → ``batched_summa3d`` → invert, in one call.
+
+    ``a``/``b`` (and optional ``mask``) are HOST matrices; ``placement``
+    overrides the computed ordering (pass ``Placement.identity(...)`` for
+    the baseline run of an A/B comparison). The driver sees the permuted
+    operands with ``spec.placement`` set, so the per-batch column maps it
+    hands the consumer are already in original column space; this wrapper
+    additionally inverts the row coordinates and returns row-major-sorted
+    global triplets — identical to an unpermuted multiply's.
+    """
+    from . import semiring as sr  # deferred: keep import-light module top
+    from .batched import batched_summa3d
+    from .distsparse import scatter_to_grid
+    from .specs import PlanSpec
+
+    semiring = semiring if semiring is not None else sr.PLUS_TIMES
+    if placement is None:
+        placement = compute_placement(a, b, strategy=strategy, mask=mask)
+    A = scatter_to_grid(placement.apply_a(a), grid, "A")
+    B = scatter_to_grid(placement.apply_b(b), grid, "B")
+    M = (
+        scatter_to_grid(placement.apply_mask(mask), grid, "C")
+        if mask is not None else None
+    )
+    spec = (spec if spec is not None else PlanSpec()).replace(
+        mask=M, placement=placement
+    )
+
+    pieces = []
+
+    def consumer(bi, c_batch, col_map):
+        pieces.append(_batch_to_global(c_batch, col_map))
+        return None
+
+    res = batched_summa3d(
+        A, B, grid, per_process_memory, consumer, path="sparse",
+        semiring=semiring, spec=spec, floors=floors, exec_spec=exec_spec,
+    )
+    rows = placement.original_rows(np.concatenate([p[0] for p in pieces]))
+    cols = np.concatenate([p[1] for p in pieces])  # driver already inverted
+    vals = np.concatenate([p[2] for p in pieces])
+    order = np.lexsort((cols, rows))
+    return PlacedResult(
+        rows=rows[order], cols=cols[order], vals=vals[order],
+        shape=(a.shape[0], b.shape[1]), placement=placement, result=res,
+    )

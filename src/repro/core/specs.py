@@ -54,6 +54,14 @@ class PlanSpec:
     reserved_bytes: int = 0
     force_num_batches: Optional[int] = None
     kbin_candidates: Optional[Tuple[int, ...]] = None
+    # Structure-aware placement (core.placement). ``placement`` means "the
+    # operands are ALREADY permuted by this Placement": the driver remaps
+    # every consumer-facing column map back to original column space (use
+    # ``placement.multiply_placed`` for the end-to-end permute/invert).
+    # ``distribution`` swaps the planner's tile→batch fold (None resolves
+    # to placement.BLOCK_CYCLIC — the only device-executable choice today).
+    placement: Optional[object] = None  # core.placement.Placement
+    distribution: Optional[object] = None  # core.placement.Distribution
 
     def replace(self, **kw) -> "PlanSpec":
         return dataclasses.replace(self, **kw)

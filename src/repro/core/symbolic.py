@@ -99,14 +99,17 @@ def host_symbolic_counts(a, b, grid_shape, mask=None) -> SymbolicCounts:
 
     Reproduces ``batched._symbolic3d_jit`` bit-for-bit (asserted by tests):
     A's per-(row block, layer, stage-k) counts contracted against B's
-    entries through the stage coordinate k_idx = s·wl + local row. Square
-    layer grids only (pr == pc), matching the distributions' alignment
-    precondition. This is what lets the autotuner enumerate (pr, pc, l)
-    candidates from one pass over the host COO per candidate, no trial
-    multiplies.
+    entries through the stage coordinate k_idx = s·wl + local row. Layer
+    grids must be square (pr == pc) OR single-layer (l == 1): with one
+    layer the stage coordinate equals the global contraction index on both
+    sides, so rectangular pr×pc×1 grids align; with l > 1 the per-layer
+    slicing only lines up when pr == pc. This is what lets the autotuner
+    enumerate (pr, pc, l) candidates from one pass over the host COO per
+    candidate, no trial multiplies.
     """
     pr, pc, l = grid_shape
-    assert pr == pc, f"square layer grids only, got {grid_shape}"
+    assert pr == pc or l == 1, \
+        f"square layer grids or l == 1 only, got {grid_shape}"
     m_a, k_dim = a.shape
     k_dim_b, n_b = b.shape
     assert k_dim == k_dim_b, (a.shape, b.shape)

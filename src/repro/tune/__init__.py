@@ -7,7 +7,10 @@ count, k-bin pinning, lookahead) configurations from ONE symbolic pass per
 candidate grid (host math, no devices, no trial multiplies) and returns a
 ``TunedConfig`` — exactly a ``PlanSpec`` + ``PlanFloors`` + ``ExecSpec`` +
 grid shape, which ``batched_summa3d`` and the serving engine's admission
-path (``ServeConfig.from_tuned``) consume directly.
+path (``ServeConfig.from_tuned``) consume directly. Placement candidates
+(``core.placement`` permutations) are priced with ``padded_comm_volume``
+— the capacity-padded transfer bytes the permutation-invariant Table II
+terms cannot see.
 """
 from .cost_model import (  # noqa: F401
     ACCEPT_BAND,
@@ -15,6 +18,7 @@ from .cost_model import (  # noqa: F401
     CostCoefficients,
     comm_volume,
     fit_overhead,
+    padded_comm_volume,
     predict_cost,
 )
 from .autotune import TunedConfig, autotune, candidate_grids  # noqa: F401

@@ -21,13 +21,26 @@ import dataclasses
 from typing import Optional, Sequence, Tuple
 
 from ..core.batched import PlanInputs, plan_from_symbolic
+from ..core.placement import compute_placement
 from ..core.specs import ExecSpec, PlanFloors, PlanSpec
 from ..core.symbolic import host_symbolic_counts
-from .cost_model import CostBreakdown, CostCoefficients, predict_cost
+from .cost_model import (
+    CostBreakdown,
+    CostCoefficients,
+    padded_comm_volume,
+    predict_cost,
+)
 
 #: local-multiply paths the tuner prices explicitly ("auto" lets the plan
 #: decide — the fixed-heuristic default the tuned pick must not lose to)
 PATHS = ("auto", "esc", "binned", "hash")
+
+#: placement strategies the tuner prices. ``None`` (no permutation) comes
+#: first and wins ties: a placement is only picked on a STRICT improvement
+#: of (predicted ms, padded transfer bytes) — the Table II volumes are
+#: permutation-invariant, so the tiebreaker is the capacity-padded volume
+#: (``padded_comm_volume``), the quantity a degree spread actually lowers.
+PLACEMENTS = (None, "degree")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +64,12 @@ class TunedConfig:
     baseline_grid_shape: Tuple[int, int, int]
     baseline_num_batches: int
     baseline_predicted: CostBreakdown
+    # winning placement STRATEGY name (None = unpermuted). Kept off
+    # ``spec.placement`` on purpose: the spec field carries a concrete
+    # Placement object for already-permuted operands, while the tuned
+    # recommendation is "run this multiply through
+    # ``placement.multiply_placed(..., strategy=...)``".
+    placement: Optional[str] = None
 
     def to_meta(self) -> dict:
         """JSON-serializable summary (bench rows, serve admission logs)."""
@@ -60,6 +79,7 @@ class TunedConfig:
             "local_path": self.spec.local_path,
             "lookahead": self.exec_spec.lookahead,
             "num_batches": self.num_batches,
+            "placement": self.placement,
             "floors": self.floors.to_meta(),
             "predicted": self.predicted.to_meta(),
             "baseline_grid_shape": list(self.baseline_grid_shape),
@@ -74,10 +94,13 @@ def candidate_grids(
     num_devices: int,
     mask: bool = False,
 ) -> Tuple[Tuple[int, int, int], ...]:
-    """All (s, s, l) layer grids with s²·l ≤ ``num_devices`` whose tile
-    math divides the operand shapes (the ``host_symbolic_counts`` /
-    ``make_grid`` preconditions): m(A) % s, k % (s·l), n(B) % s — plus
-    n(B) % (s·l) when a mask will be scattered (C-layout tiles)."""
+    """All (s, s, l) layer grids with s²·l ≤ ``num_devices`` — plus every
+    RECTANGULAR single-layer (pr, pc, 1) with pr·pc ≤ ``num_devices`` —
+    whose tile math divides the operand shapes (the
+    ``host_symbolic_counts`` / ``make_grid`` preconditions): m(A) % pr,
+    k % (pr·l) and k % (pc·l), n(B) % pc — plus n(B) % (pc·l) when a mask
+    will be scattered (C-layout tiles). Rectangular layer grids only align
+    the contraction slices at l == 1, hence the single-layer restriction."""
     m_a, k_dim = a_shape
     k_dim_b, n_b = b_shape
     assert k_dim == k_dim_b, (a_shape, b_shape)
@@ -94,16 +117,27 @@ def candidate_grids(
                     out.append((s, s, l))
                 l += 1
         s += 1
+    for pr in range(1, num_devices + 1):
+        if m_a % pr or k_dim % pr:
+            continue
+        for pc in range(1, num_devices // pr + 1):
+            if pc == pr:
+                continue  # squares enumerated above (with their layers)
+            if n_b % pc or k_dim % pc:
+                continue
+            out.append((pr, pc, 1))
     return tuple(out)
 
 
 def _default_grid(
     grids: Sequence[Tuple[int, int, int]],
 ) -> Tuple[int, int, int]:
-    """The grid the fixed heuristics would pick: use all the devices you
-    can, prefer the squarest layout (``square_grid_for``'s shape) among
-    equal process counts, then the fewest layers."""
-    return max(grids, key=lambda g: (g[0] * g[1] * g[2], g[0], -g[2]))
+    """The grid the fixed heuristics would pick: among the SQUARE layer
+    grids (``square_grid_for`` never proposes a rectangle), use all the
+    devices you can, prefer the squarest layout among equal process counts,
+    then the fewest layers."""
+    squares = [g for g in grids if g[0] == g[1]]
+    return max(squares, key=lambda g: (g[0] * g[1] * g[2], g[0], -g[2]))
 
 
 def autotune(
@@ -141,57 +175,73 @@ def autotune(
         )
     base_grid = _default_grid(grids)
 
-    best = None  # (total_ms, TunedConfig-args tuple)
+    best = None  # TunedConfig-args tuple for the winning candidate
+    best_key = None  # (total_ms, padded transfer bytes) — strict-< compare
     baseline = None  # (grid, plan, CostBreakdown) for the default config
 
-    for grid in grids:
-        counts = host_symbolic_counts(a, b, grid, mask=mask)
-        inputs = PlanInputs.from_host(a, b, grid, mask=mask)
-        for path in PATHS:
-            for kbin_pin in (None, (1,)):
-                spec = PlanSpec(local_path=path, r_bytes=r_bytes,
-                                kbin_candidates=kbin_pin)
-                try:
-                    plan = plan_from_symbolic(
-                        counts, inputs, per_process_memory, spec,
-                        PlanFloors(),
-                    )
-                except MemoryError:
-                    if grid == base_grid and path == "auto" \
-                            and kbin_pin is None:
-                        raise  # the default config itself is infeasible
-                    continue
-                nb_forced = (None, plan.num_batches * 2)
-                for force in nb_forced:
-                    if force is not None:
-                        try:
-                            plan_f = plan_from_symbolic(
-                                counts, inputs, per_process_memory,
-                                dataclasses.replace(
-                                    spec, force_num_batches=force),
-                                PlanFloors(),
+    for strategy in PLACEMENTS:
+        if strategy is None:
+            pa, pb, pmask = a, b, mask
+        else:
+            placement = compute_placement(a, b, strategy=strategy, mask=mask)
+            pa, pb = placement.apply_a(a), placement.apply_b(b)
+            pmask = placement.apply_mask(mask) if mask is not None else None
+        for grid in grids:
+            counts = host_symbolic_counts(pa, pb, grid, mask=pmask)
+            inputs = PlanInputs.from_host(pa, pb, grid, mask=pmask)
+            for path in PATHS:
+                for kbin_pin in (None, (1,)):
+                    spec = PlanSpec(local_path=path, r_bytes=r_bytes,
+                                    kbin_candidates=kbin_pin)
+                    try:
+                        plan = plan_from_symbolic(
+                            counts, inputs, per_process_memory, spec,
+                            PlanFloors(),
+                        )
+                    except MemoryError:
+                        if strategy is None and grid == base_grid \
+                                and path == "auto" and kbin_pin is None:
+                            raise  # the default config itself is infeasible
+                        continue
+                    nb_forced = (None, plan.num_batches * 2)
+                    for force in nb_forced:
+                        if force is not None:
+                            try:
+                                plan_f = plan_from_symbolic(
+                                    counts, inputs, per_process_memory,
+                                    dataclasses.replace(
+                                        spec, force_num_batches=force),
+                                    PlanFloors(),
+                                )
+                            except MemoryError:
+                                continue
+                        else:
+                            plan_f = plan
+                        for la in lookaheads:
+                            cost = predict_cost(
+                                plan_f, grid, inputs.nnz_a, inputs.nnz_b,
+                                coeffs=coeffs, r_bytes=r_bytes,
+                                pipelined=True, lookahead=la,
                             )
-                        except MemoryError:
-                            continue
-                    else:
-                        plan_f = plan
-                    for la in lookaheads:
-                        cost = predict_cost(
-                            plan_f, grid, inputs.nnz_a, inputs.nnz_b,
-                            coeffs=coeffs, r_bytes=r_bytes, pipelined=True,
-                            lookahead=la,
-                        )
-                        is_default = (
-                            grid == base_grid and path == "auto"
-                            and kbin_pin is None and force is None
-                            and la == ExecSpec().lookahead
-                        )
-                        if is_default:
-                            baseline = (grid, plan_f, cost)
-                        cand = (grid, plan_f, cost, path, kbin_pin,
-                                force, la)
-                        if best is None or cost.total_ms < best[2].total_ms:
-                            best = cand
+                            padded = padded_comm_volume(
+                                plan_f, grid, r_bytes=r_bytes
+                            )
+                            is_default = (
+                                strategy is None and grid == base_grid
+                                and path == "auto" and kbin_pin is None
+                                and force is None
+                                and la == ExecSpec().lookahead
+                            )
+                            if is_default:
+                                baseline = (grid, plan_f, cost)
+                            cand = (grid, plan_f, cost, path, kbin_pin,
+                                    force, la, strategy)
+                            # lexicographic, strict: placements iterate
+                            # after None, so a permutation only wins when
+                            # it strictly lowers the (ms, padded-bytes) key
+                            key = (cost.total_ms, padded.total_bytes)
+                            if best is None or key < best_key:
+                                best, best_key = cand, key
 
     assert best is not None  # default grid either planned or raised
     if baseline is None:
@@ -211,7 +261,7 @@ def autotune(
                          lookahead=ExecSpec().lookahead),
         )
 
-    grid, plan, cost, path, kbin_pin, force, la = best
+    grid, plan, cost, path, kbin_pin, force, la, strategy = best
     decided = plan.local_path
     pin = kbin_pin
     if pin is None and decided == "binned" and plan.kbin is not None:
@@ -240,4 +290,5 @@ def autotune(
         baseline_grid_shape=baseline[0],
         baseline_num_batches=baseline[1].num_batches,
         baseline_predicted=baseline[2],
+        placement=strategy,
     )

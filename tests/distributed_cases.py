@@ -519,6 +519,61 @@ def case_tune_oracle_parity():
     print("OK tune_oracle_parity")
 
 
+def case_rect_grid_oracle_parity():
+    """Rectangular single-layer grids: the host symbolic oracle matches the
+    device pass BIT-FOR-BIT on a real 4×2×1 mesh (the stage stride is B's
+    own tile row count — wrong if A's tile width were used, which only a
+    pr ≠ pc grid can detect), the derived plans agree, and the batched
+    driver's numeric product is correct — what licenses the autotuner's new
+    rectangular (pr, pc, 1) candidates."""
+    from repro.core.batched import PlanInputs, plan_from_symbolic, \
+        symbolic3d_counts
+    from repro.core.specs import PlanFloors, PlanSpec
+    from repro.core.symbolic import host_symbolic_counts
+
+    n = 64
+    a = gen.rmat(6, edge_factor=8, seed=3)
+    b = gen.rmat(6, edge_factor=8, seed=4)
+    for pr, pc in ((4, 2), (2, 4)):
+        grid = make_grid(pr, pc, 1)
+        A = scatter_to_grid(a, grid, "A")
+        B = scatter_to_grid(b, grid, "B")
+        dev = symbolic3d_counts(A, B, grid)
+        host = host_symbolic_counts(a, b, (pr, pc, 1))
+        np.testing.assert_array_equal(np.asarray(dev.percol), host.percol)
+        np.testing.assert_array_equal(np.asarray(dev.b_colcounts),
+                                      host.b_colcounts)
+        np.testing.assert_array_equal(np.asarray(dev.a_kcounts),
+                                      host.a_kcounts)
+        np.testing.assert_array_equal(np.asarray(dev.b_kcounts),
+                                      host.b_kcounts)
+
+        ppm = 1 << 22
+        dev_plan = plan_batches(A, B, grid, per_process_memory=ppm,
+                                spec=PlanSpec())
+        inputs = PlanInputs.from_host(a, b, (pr, pc, 1))
+        host_plan = plan_from_symbolic(
+            host, inputs, ppm, PlanSpec(), PlanFloors(),
+        )
+        assert host_plan.num_batches == dev_plan.num_batches
+        assert host_plan.caps == dev_plan.caps
+        assert host_plan.sel_cap == dev_plan.sel_cap
+        assert host_plan.local_path == dev_plan.local_path
+        assert host_plan.total_flops == dev_plan.total_flops
+
+        # numeric correctness of the batched driver on the rectangle
+        got = np.zeros((n, n), np.float32)
+
+        def consumer(bi, c, col_map):
+            got[:] += reconstruct_sparse_c(c, grid, col_map, n, n)
+
+        batched_summa3d(A, B, grid, 1 << 30, consumer)
+        xa = np.asarray(a.to_dense())
+        xb = np.asarray(b.to_dense())
+        np.testing.assert_allclose(got, xa @ xb, rtol=1e-4, atol=1e-4)
+    print("OK rect_grid_oracle_parity")
+
+
 def _collect_cases():
     return {
         name[len("case_"):]: fn

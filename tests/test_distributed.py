@@ -28,6 +28,7 @@ CASES = [
     "rectangular_aat",
     "ring_schedule_matches",
     "tune_oracle_parity",
+    "rect_grid_oracle_parity",
 ]
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

@@ -23,6 +23,7 @@ CASES = [
     "overlap_device_filter",
     "mcl_kill_and_resume",
     "apsp_min_plus",
+    "placement_rmat_volume",
 ]
 
 

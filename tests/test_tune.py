@@ -143,12 +143,16 @@ class TestAutotune:
         grids = candidate_grids((256, 256), (256, 256), 8)
         assert (2, 2, 2) in grids and (1, 1, 1) in grids
         for pr, pc, l in grids:
-            assert pr == pc and pr * pc * l <= 8
+            assert pr * pc * l <= 8
+            assert l == 1 or pr == pc  # rectangles only as single-layer grids
             assert 256 % pr == 0 and 256 % (pc * l) == 0
         # odd shapes prune non-dividing grids (no l=4 layer split of k=6,
-        # no 3×3 side of 8 devices)
+        # no 3×3 side of 8 devices); squares enumerate first, then the
+        # single-layer rectangles by ascending pr, pc
         assert candidate_grids((6, 6), (6, 6), 8) == (
-            (1, 1, 1), (1, 1, 2), (1, 1, 3), (1, 1, 6), (2, 2, 1))
+            (1, 1, 1), (1, 1, 2), (1, 1, 3), (1, 1, 6), (2, 2, 1),
+            (1, 2, 1), (1, 3, 1), (1, 6, 1), (2, 1, 1), (2, 3, 1),
+            (3, 1, 1), (3, 2, 1), (6, 1, 1))
 
     def test_never_worse_than_defaults(self):
         a, b = _bench_pair()
